@@ -1,0 +1,54 @@
+"""Shared benchmark substrate: corpus build, field indexing, timing."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_retrieval import RetrievalConfig
+from repro.core.scorers import (bm25_doc_vectors, build_forward_index,
+                                query_sparse_vectors)
+from repro.data.pipeline import pad_tokens
+from repro.data.synthetic import SyntheticCorpus, make_corpus, qrels_to_labels
+
+
+class FieldBundle:
+    """One indexed text field: forward index + BM25 sparse export + padded
+    query tokens — the per-field artifact FlexNeuART's indexing produces."""
+
+    def __init__(self, doc_rows, q_rows, vocab, nnz_doc=64, nnz_q=16,
+                 max_qlen=16):
+        self.vocab = vocab
+        self.fwd = build_forward_index(doc_rows, vocab)
+        self.doc_bm25 = bm25_doc_vectors(self.fwd, nnz=nnz_doc)
+        self.q_tokens = jnp.asarray(pad_tokens(q_rows, max_qlen, vocab),
+                                    jnp.int32)
+        self.q_sparse = query_sparse_vectors(self.q_tokens, vocab, nnz_q)
+
+
+def build_fields(corpus: SyntheticCorpus, rc: RetrievalConfig):
+    return {
+        "lemmas": FieldBundle(corpus.doc_lemmas, corpus.q_lemmas,
+                              corpus.vocab_lemmas, rc.doc_nnz, rc.query_nnz),
+        "tokens": FieldBundle(corpus.doc_tokens, corpus.q_tokens,
+                              corpus.vocab_tokens, rc.doc_nnz, rc.query_nnz),
+        "bert": FieldBundle(corpus.doc_bert, corpus.q_bert,
+                            corpus.vocab_bert, rc.doc_nnz, rc.query_nnz,
+                            max_qlen=24),
+    }
+
+
+def labels_for(corpus, cand_ids):
+    return jnp.asarray(qrels_to_labels(corpus, np.asarray(cand_ids)))
+
+
+def time_call(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us/call

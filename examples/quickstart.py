@@ -1,0 +1,105 @@
+"""Quickstart: index a corpus and search it four ways.
+
+Builds a synthetic corpus, constructs (1) an inverted BM25 index, (2) an
+exact fused sparse+dense MIPS index, (3) a graph-ANN (NSW/HNSW-style)
+index and (4) a NAPP index over the SAME fused representation, then runs
+the same queries through each — the NMSLIB "spaces are pluggable, methods
+are distance-agnostic" design, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_retrieval import smoke_config
+from repro.core import (FusedSpace, FusedVectors, build_inverted_index,
+                        build_napp, beam_search, daat_topk, exact_topk,
+                        napp_search, nn_descent)
+from repro.core.fusion import mrr
+from repro.core.scorers import (bm25_doc_vectors, build_forward_index,
+                                query_sparse_vectors)
+from repro.data.pipeline import pad_tokens
+from repro.data.synthetic import make_corpus, qrels_to_labels
+from repro.kernels import ops as kernel_ops
+
+
+def main():
+    rc = smoke_config()
+    print(f"corpus: {rc.n_docs} docs, {rc.n_queries} queries")
+    corpus = make_corpus(n_docs=rc.n_docs, n_queries=rc.n_queries,
+                         vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
+
+    # ---- indexing (FlexNeuART offline stage) ------------------------------
+    fwd = build_forward_index(corpus.doc_lemmas, rc.vocab_lemmas)
+    doc_bm25 = bm25_doc_vectors(fwd, nnz=rc.doc_nnz)
+    q_tokens = jnp.asarray(pad_tokens(corpus.q_lemmas, 8, rc.vocab_lemmas))
+    q_sparse = query_sparse_vectors(q_tokens, rc.vocab_lemmas, rc.query_nnz)
+
+    # dense embeddings (here: topic vectors; in production: an LM encoder,
+    # see examples/train_encoder.py)
+    rng = np.random.default_rng(0)
+    topics = np.asarray(corpus.doc_topic)
+    dd = jnp.asarray(np.eye(topics.max() + 1)[topics] * 2.0
+                     + rng.normal(size=(rc.n_docs, topics.max() + 1)) * 0.2,
+                     jnp.float32)
+    src = np.asarray([[d for d, g in r.items() if g == 2][0]
+                      for r in corpus.qrels])
+    qd = dd[src] + jnp.asarray(rng.normal(size=dd[src].shape) * 0.3, jnp.float32)
+
+    fused_docs = FusedVectors(dd, doc_bm25)
+    fused_queries = FusedVectors(qd, q_sparse)
+    space = FusedSpace(rc.vocab_lemmas, w_dense=0.5, w_sparse=1.0)
+
+    def report(name, tk, t):
+        labels = jnp.asarray(qrels_to_labels(corpus, np.asarray(tk.indices)))
+        m = float(mrr(tk.scores, labels, jnp.isfinite(tk.scores)))
+        print(f"{name:28s} MRR@10 {m:.3f}   ({t*1e3:.1f} ms)")
+
+    # ---- 1. inverted-file BM25 (Lucene's role) ----------------------------
+    t0 = time.time()
+    inv = build_inverted_index(doc_bm25, rc.vocab_lemmas)
+    tk = daat_topk(inv, q_sparse, 10)
+    report("inverted-file BM25", tk, time.time() - t0)
+
+    # ---- 2. exact fused sparse+dense MIPS ---------------------------------
+    t0 = time.time()
+    tk = exact_topk(space, fused_queries, fused_docs, 10)
+    report("exact fused MIPS", tk, time.time() - t0)
+
+    # 2b. the Pallas kernel path for the dense component
+    t0 = time.time()
+    tk_k = kernel_ops.mips_topk(qd, dd, 10, tile_n=128)
+    report("dense MIPS (Pallas kernel)", tk_k, time.time() - t0)
+
+    # ---- 3. graph ANN (NSW/HNSW) over the fused space ---------------------
+    t0 = time.time()
+    gi = nn_descent(space, fused_docs, rc.n_docs, degree=rc.ann_degree,
+                    rounds=rc.ann_rounds, node_block=128)
+    tk = beam_search(space, fused_queries, fused_docs, gi, rc.n_docs,
+                     k=10, ef=rc.ann_ef)
+    report("graph ANN (fused space)", tk, time.time() - t0)
+
+    # ---- 4. NAPP over the fused space --------------------------------------
+    t0 = time.time()
+    ni = build_napp(space, fused_docs, rc.n_docs,
+                    num_pivots=rc.napp_pivots, num_index=rc.napp_index)
+    tk = napp_search(space, fused_queries, fused_docs, ni, k=10,
+                     num_search=rc.napp_search, min_times=1)
+    report("NAPP (fused space)", tk, time.time() - t0)
+
+    # ---- weight re-tuning after export (scenario 1) ------------------------
+    print("\nre-tuning fused weights post-export (scenario 1):")
+    for wd in (0.0, 0.25, 0.5, 1.0):
+        tk = exact_topk(space.with_weights(wd, 1.0), fused_queries,
+                        fused_docs, 10)
+        labels = jnp.asarray(qrels_to_labels(corpus, np.asarray(tk.indices)))
+        m = float(mrr(tk.scores, labels, jnp.isfinite(tk.scores)))
+        print(f"  w_dense={wd:.2f}: MRR@10 {m:.3f}")
+
+
+if __name__ == "__main__":
+    main()

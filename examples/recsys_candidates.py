@@ -1,0 +1,77 @@
+"""RecSys candidate generation: the ``retrieval_cand`` scenario end to end.
+
+A (reduced) DIN model's user tower produces the dense query; item
+embeddings are the corpus; the paper's MIPS machinery (exact + Pallas
+kernel + fused with sparse user-profile one-hots) generates candidates —
+recommendation candidate generation IS the paper's retrieval problem.
+
+    PYTHONPATH=src python examples/recsys_candidates.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as reg
+from repro.core import FusedSpace, FusedVectors, exact_topk
+from repro.core.sparse import SparseVectors
+from repro.distributed.sharding import ParallelCtx
+from repro.kernels import ops as kernel_ops
+from repro.models import recsys as R
+
+
+def main():
+    ctx = ParallelCtx(None, {})
+    cfg = reg.get_smoke_config("din")
+    params, _ = R.init_recsys(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    b, n_items = 8, cfg.item_vocab
+
+    batch = R.RecBatch(
+        fields={f.name: jnp.asarray(rng.integers(0, f.vocab, b), jnp.int32)
+                for f in cfg.fields},
+        history=jnp.asarray(rng.integers(0, n_items + 1, (b, cfg.seq_len)),
+                            jnp.int32),
+        target_item=jnp.asarray(rng.integers(0, n_items, b), jnp.int32),
+        label=jnp.zeros((b,), jnp.float32),
+        candidates=jnp.asarray(np.tile(np.arange(n_items), (b, 1)), jnp.int32),
+    )
+
+    # dense query via the user tower
+    u = R.user_tower(params, cfg, batch, ctx)
+    proj = params["mlp"][0]["w"][:, : cfg.embed_dim]
+    uq = u @ proj
+    item_table = params["tables"]["item"]
+    print(f"user query {uq.shape}, item corpus {item_table.shape}")
+
+    # 1. exact MIPS over all items
+    tk = exact_topk(FusedSpace(1, w_dense=1.0, w_sparse=0.0),
+                    FusedVectors(uq, None), FusedVectors(item_table, None), 20)
+    # 2. the Pallas kernel path
+    tk_k = kernel_ops.mips_topk(uq, item_table, 20, tile_n=250)
+    agree = np.mean(np.asarray(tk.indices) == np.asarray(tk_k.indices))
+    print(f"exact vs kernel candidate agreement: {agree:.3f}")
+    assert agree > 0.99
+
+    # 3. fused: sparse user-tag one-hots bias the dense scores — the
+    # paper's mixed sparse+dense retrieval applied to recommendations.
+    tag_of_item = jnp.asarray(rng.integers(0, 50, n_items), jnp.int32)
+    item_sparse = SparseVectors(tag_of_item[:, None],
+                                jnp.ones((n_items, 1), jnp.float32))
+    user_tags = jnp.asarray(rng.integers(0, 50, (b, 3)), jnp.int32)
+    user_sparse = SparseVectors(user_tags, jnp.ones((b, 3), jnp.float32))
+    space = FusedSpace(50, w_dense=1.0, w_sparse=0.5)
+    tk_f = exact_topk(space, FusedVectors(uq, user_sparse),
+                      FusedVectors(item_table, item_sparse), 20)
+    # candidates with matching tags should be over-represented vs dense-only
+    match_dense = np.mean(np.asarray(tag_of_item)[np.asarray(tk.indices)]
+                          == np.asarray(user_tags)[:, :1])
+    match_fused = np.mean(np.asarray(tag_of_item)[np.asarray(tk_f.indices)]
+                          == np.asarray(user_tags)[:, :1])
+    print(f"tag-match rate: dense-only {match_dense:.3f} -> "
+          f"fused {match_fused:.3f}")
+    assert match_fused >= match_dense
+
+
+if __name__ == "__main__":
+    main()

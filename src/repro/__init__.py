@@ -1,0 +1,4 @@
+"""repro — Flexible Retrieval with NMSLIB + FlexNeuART as a multi-pod
+JAX/TPU framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

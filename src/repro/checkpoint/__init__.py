@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,41 @@
+"""Config registry: ``--arch <id>`` resolution.
+
+ARCHS maps the assigned architecture ids to their config modules; each
+module exports CONFIG (exact public-literature hyperparameters) and
+smoke_config() (reduced same-family config for CPU tests)."""
+
+import importlib
+
+ARCHS = {
+    "qwen2.5-3b": "repro.configs.qwen25_3b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "schnet": "repro.configs.schnet",
+    "bst": "repro.configs.bst",
+    "din": "repro.configs.din",
+    "wide-deep": "repro.configs.wide_deep",
+    "dien": "repro.configs.dien",
+}
+
+
+def get_module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str, shape: str | None = None):
+    mod = get_module(arch)
+    if shape is not None and hasattr(mod, "config_for_shape"):
+        return mod.config_for_shape(shape)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    return get_module(arch).smoke_config()
+
+
+def all_archs():
+    return list(ARCHS)

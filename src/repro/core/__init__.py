@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: flexible retrieval over dense,
+sparse, and FUSED sparse+dense representations (NMSLIB + FlexNeuART in JAX).
+
+Layering (bottom to top):
+  sparse / spaces          representations + distance-agnostic spaces
+  brute_force              exact k-NN / MIPS (tiled, sharded)
+  inverted_index           exact sparse MIPS via postings (Lucene's role)
+  graph_ann / napp         approximate k-NN (NSW/HNSW, NAPP) — TPU-adapted
+  scorers / model1         FlexNeuART feature extractors
+  fusion                   LETOR (coordinate ascent, LambdaMART) + export
+  pipeline                 multi-stage funnel (Fig. 1)
+"""
+
+from repro.core.sparse import SparseVectors, from_dense, densify  # noqa: F401
+from repro.core.spaces import DenseSpace, SparseSpace, FusedSpace, FusedVectors  # noqa: F401
+from repro.core.brute_force import TopK, exact_topk, streaming_topk, sharded_exact_topk  # noqa: F401
+from repro.core.inverted_index import build_inverted_index, daat_topk  # noqa: F401
+from repro.core.graph_ann import GraphIndex, nn_descent, beam_search  # noqa: F401
+from repro.core.napp import NappIndex, build_napp, napp_search  # noqa: F401
+from repro.core.pipeline import RetrievalPipeline  # noqa: F401

@@ -1,0 +1,205 @@
+"""Multi-stage retrieval pipeline — paper Fig. 1 / §3.2.
+
+Documents flow through a series of "funnels": a *candidate generator*
+produces ``cand_qty`` documents, an optional *intermediate* re-ranker
+rescoring ``interm_qty`` of them, and an optional *final* re-ranker
+producing the result list.  Candidate generators and re-rankers are
+plugable (the toolkit's stated design goal): anything implementing the
+small protocols below slots in.
+
+The experiment descriptor (paper Fig. 4) maps onto
+:meth:`RetrievalPipeline.from_descriptor`: the descriptor references
+extractor configs rather than inlining them, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.brute_force import TopK, exact_topk, streaming_topk
+from repro.core import graph_ann, napp
+from repro.core.inverted_index import InvertedIndex, daat_topk
+from repro.core.scorers import CompositeExtractor
+
+__all__ = [
+    "CandidateGenerator",
+    "BruteForceGenerator",
+    "StreamingGenerator",
+    "GraphANNGenerator",
+    "NappGenerator",
+    "InvertedIndexGenerator",
+    "Reranker",
+    "LinearReranker",
+    "TreeReranker",
+    "RetrievalPipeline",
+]
+
+
+class CandidateGenerator(Protocol):
+    def generate(self, query_repr, k: int) -> TopK: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BruteForceGenerator:
+    """Exact MIPS over any space (dense / sparse / fused)."""
+
+    space: object
+    corpus: object
+    n_valid: Optional[int] = None
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return exact_topk(self.space, query_repr, self.corpus, k, self.n_valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingGenerator:
+    """Tiled exact MIPS (bounded memory); dense corpora only."""
+
+    space: object
+    corpus: jax.Array
+    tile_n: int = 8192
+    n_valid: Optional[int] = None
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return streaming_topk(self.space, query_repr, self.corpus, k, self.tile_n, self.n_valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphANNGenerator:
+    """NSW/HNSW-style beam search (see ``core.graph_ann``)."""
+
+    space: object
+    corpus: object
+    index: graph_ann.GraphIndex
+    n_items: int
+    ef: int = 64
+    hops: Optional[int] = None
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return graph_ann.beam_search(
+            self.space, query_repr, self.corpus, self.index, self.n_items,
+            k=k, ef=max(self.ef, k), hops=self.hops,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class NappGenerator:
+    space: object
+    corpus: object
+    index: napp.NappIndex
+    num_search: int = 8
+    min_times: int = 2
+    rerank_qty: int = 256
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return napp.napp_search(
+            self.space, query_repr, self.corpus, self.index,
+            k=k, num_search=self.num_search, min_times=self.min_times,
+            rerank_qty=max(self.rerank_qty, k),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedIndexGenerator:
+    """Lucene's role in the paper: exact sparse scoring via inverted file."""
+
+    index: InvertedIndex
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return daat_topk(self.index, query_repr, k)
+
+
+# ---------------------------------------------------------------------------
+# Re-rankers: composite features -> model score -> reorder candidates.
+# ---------------------------------------------------------------------------
+
+class Reranker(Protocol):
+    def rerank(self, q_tokens: jax.Array, cands: TopK, keep: int) -> TopK: ...
+
+
+def _reorder(cands: TopK, new_scores: jax.Array, keep: int) -> TopK:
+    vals, pos = jax.lax.top_k(new_scores, keep)
+    return TopK(vals, jnp.take_along_axis(cands.indices, pos, axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearReranker:
+    """Composite extractor + linear LETOR model (coordinate-ascent output)."""
+
+    extractor: CompositeExtractor
+    weights: jax.Array   # f32[F]
+
+    def rerank(self, q_tokens: jax.Array, cands: TopK, keep: int) -> TopK:
+        feats = self.extractor.extract(q_tokens, cands.indices)
+        mask = jnp.isfinite(cands.scores)
+        s = jnp.where(mask, jnp.einsum("qcf,f->qc", feats, self.weights), -jnp.inf)
+        return _reorder(cands, s, keep)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeReranker:
+    """Composite extractor + LambdaMART oblivious-tree ensemble."""
+
+    extractor: CompositeExtractor
+    ensemble: object   # fusion.ObliviousTreeEnsemble
+
+    def rerank(self, q_tokens: jax.Array, cands: TopK, keep: int) -> TopK:
+        feats = self.extractor.extract(q_tokens, cands.indices)
+        mask = jnp.isfinite(cands.scores)
+        s = jnp.where(mask, self.ensemble.predict(feats), -jnp.inf)
+        return _reorder(cands, s, keep)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalPipeline:
+    """candidate generator -> (optional) intermediate -> (optional) final."""
+
+    generator: CandidateGenerator
+    intermediate: Optional[Reranker] = None
+    final: Optional[Reranker] = None
+    cand_qty: int = 100
+    interm_qty: int = 50
+    final_qty: int = 10
+
+    def run(self, query_repr, q_tokens: Optional[jax.Array] = None) -> TopK:
+        cands = self.generator.generate(query_repr, self.cand_qty)
+        if self.intermediate is not None:
+            cands = self.intermediate.rerank(q_tokens, cands, self.interm_qty)
+        if self.final is not None:
+            cands = self.final.rerank(q_tokens, cands, self.final_qty)
+        else:
+            keep = self.final_qty if self.final_qty <= cands.scores.shape[1] else cands.scores.shape[1]
+            cands = TopK(cands.scores[:, :keep], cands.indices[:, :keep])
+        return cands
+
+    @classmethod
+    def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":
+        """Paper Fig. 4 experiment descriptor.  Recognised keys:
+        candProv (name into context), extrType / extrTypeInterm (extractor
+        configs), model / modelInterm (weight arrays or ensembles),
+        candQty / intermQty / finalQty."""
+        from repro.core.fusion import ObliviousTreeEnsemble
+
+        gen = context[desc.get("candProv", "candidate_provider")]
+
+        def build(extr_key, model_key):
+            if extr_key not in desc:
+                return None
+            extractor = CompositeExtractor.from_config(desc[extr_key], **context)
+            model = context[desc[model_key]]
+            if isinstance(model, ObliviousTreeEnsemble):
+                return TreeReranker(extractor, model)
+            return LinearReranker(extractor, jnp.asarray(model))
+
+        return cls(
+            generator=gen,
+            intermediate=build("extrTypeInterm", "modelInterm"),
+            final=build("extrType", "model"),
+            cand_qty=int(desc.get("candQty", 100)),
+            interm_qty=int(desc.get("intermQty", 50)),
+            final_qty=int(desc.get("finalQty", 10)),
+        )

@@ -1,0 +1,156 @@
+"""Distance/similarity *spaces* — NMSLIB's central abstraction, in JAX.
+
+NMSLIB calls a (data format, distance) combination a *space*; search methods
+are distance-agnostic and work through this interface, which is what lets
+the library add new distances without touching the retrieval algorithms
+(paper §2).  We preserve that property: every index in ``repro.core``
+(brute force, graph ANN, NAPP) takes a ``Space`` and only ever calls
+``score_batch``/``score_pairs``.
+
+Convention: scores are "higher is better".  Metric distances are negated
+(``-L2``) so a single top-k path serves both similarities and distances —
+mirroring NMSLIB's internal sign flip for similarity spaces.
+
+Supported spaces (paper §2 lists the same inventory):
+  * dense:  inner product, cosine, L2, Lp (p configurable)
+  * sparse: inner product, cosine (padded COO — see ``core.sparse``)
+  * fused sparse+dense inner product with adjustable component weights —
+    the paper's NOVEL mixed representation (§3.2 export scenario 1); the
+    composite-vector export (scenario 2) lives in ``core.fusion``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse as sp
+
+__all__ = [
+    "DenseSpace",
+    "SparseSpace",
+    "FusedSpace",
+    "FusedVectors",
+    "dense_scores",
+]
+
+
+def dense_scores(kind: str, q: jax.Array, d: jax.Array, p: float = 2.0) -> jax.Array:
+    """All-pairs dense scores [B, N] for query [B, D] vs docs [N, D]."""
+    if kind == "ip":
+        return q @ d.T
+    if kind == "cosine":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        dn = d / jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-12)
+        return qn @ dn.T
+    if kind == "l2":
+        # -||q - d||^2 via the matmul identity: MXU-friendly, no B*N*D blowup.
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)        # [B,1]
+        d2 = jnp.sum(d * d, axis=-1, keepdims=True).T      # [1,N]
+        return -(q2 + d2 - 2.0 * (q @ d.T))
+    if kind == "lp":
+        diff = jnp.abs(q[:, None, :] - d[None, :, :])      # [B,N,D] (small D only)
+        return -jnp.sum(diff**p, axis=-1) ** (1.0 / p)
+    raise ValueError(f"unknown dense space kind: {kind}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpace:
+    """Fixed-size dense vectors with ip / cosine / l2 / lp scoring."""
+
+    kind: str = "ip"
+    p: float = 2.0
+
+    def score_batch(self, queries: jax.Array, corpus: jax.Array) -> jax.Array:
+        return dense_scores(self.kind, queries, corpus, self.p)
+
+    def score_pairs(self, queries: jax.Array, docs: jax.Array) -> jax.Array:
+        """Aligned scores: queries [B, D] vs docs [B, D] -> [B]."""
+        if self.kind == "ip":
+            return jnp.sum(queries * docs, axis=-1)
+        if self.kind == "cosine":
+            qn = queries / jnp.maximum(jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12)
+            dn = docs / jnp.maximum(jnp.linalg.norm(docs, axis=-1, keepdims=True), 1e-12)
+            return jnp.sum(qn * dn, axis=-1)
+        if self.kind == "l2":
+            d = queries - docs
+            return -jnp.sum(d * d, axis=-1)
+        if self.kind == "lp":
+            return -jnp.sum(jnp.abs(queries - docs) ** self.p, axis=-1) ** (1.0 / self.p)
+        raise ValueError(self.kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseSpace:
+    """Variable-size sparse vectors (padded COO) under inner product/cosine."""
+
+    vocab_size: int
+    kind: str = "ip"
+    tile_n: int = 0  # 0 = untiled
+
+    def score_batch(self, queries: sp.SparseVectors, corpus: sp.SparseVectors) -> jax.Array:
+        q = sp.l2_normalize_sparse(queries) if self.kind == "cosine" else queries
+        d = sp.l2_normalize_sparse(corpus) if self.kind == "cosine" else corpus
+        if self.tile_n:
+            return sp.sparse_inner_tiled(q, d, self.vocab_size, self.tile_n)
+        return sp.sparse_inner_qbatch_docs(q, d, self.vocab_size)
+
+    def score_pairs(self, queries: sp.SparseVectors, docs: sp.SparseVectors) -> jax.Array:
+        q = sp.l2_normalize_sparse(queries) if self.kind == "cosine" else queries
+        d = sp.l2_normalize_sparse(docs) if self.kind == "cosine" else docs
+        return sp.sparse_inner_one_to_one(q, d, self.vocab_size)
+
+
+class FusedVectors(NamedTuple):
+    """The paper's mixed representation: one dense + one sparse component per
+    item.  ``dense`` may be None for sparse-only items and vice versa."""
+
+    dense: Optional[jax.Array]          # f32[..., D] or None
+    sparse: Optional[sp.SparseVectors]  # padded COO or None
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpace:
+    """w_dense * <q_d, x_d>  +  w_sparse * <q_s, x_s>.
+
+    This is FlexNeuART export scenario 1 (paper §3.2): NMSLIB combines the
+    per-extractor representations *at query time* with adjustable weights,
+    so the mixing weights can be re-tuned after the index is built.  The
+    weights come from LETOR training (``core.fusion``).
+    """
+
+    vocab_size: int
+    w_dense: float = 1.0
+    w_sparse: float = 1.0
+    dense_kind: str = "ip"
+    tile_n: int = 0
+
+    def with_weights(self, w_dense: float, w_sparse: float) -> "FusedSpace":
+        return dataclasses.replace(self, w_dense=w_dense, w_sparse=w_sparse)
+
+    def score_batch(self, queries: FusedVectors, corpus: FusedVectors) -> jax.Array:
+        total = None
+        if queries.dense is not None and corpus.dense is not None:
+            total = self.w_dense * dense_scores(self.dense_kind, queries.dense, corpus.dense)
+        if queries.sparse is not None and corpus.sparse is not None:
+            s = SparseSpace(self.vocab_size, "ip", self.tile_n).score_batch(
+                queries.sparse, corpus.sparse
+            )
+            total = self.w_sparse * s if total is None else total + self.w_sparse * s
+        if total is None:
+            raise ValueError("FusedSpace: no overlapping components to score")
+        return total
+
+    def score_pairs(self, queries: FusedVectors, docs: FusedVectors) -> jax.Array:
+        total = None
+        if queries.dense is not None and docs.dense is not None:
+            total = self.w_dense * DenseSpace(self.dense_kind).score_pairs(queries.dense, docs.dense)
+        if queries.sparse is not None and docs.sparse is not None:
+            s = SparseSpace(self.vocab_size).score_pairs(queries.sparse, docs.sparse)
+            total = self.w_sparse * s if total is None else total + self.w_sparse * s
+        if total is None:
+            raise ValueError("FusedSpace: no overlapping components to score")
+        return total

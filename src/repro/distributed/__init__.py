@@ -1,0 +1,2 @@
+from repro.distributed.sharding import ParallelCtx  # noqa: F401
+from repro.distributed.mesh_utils import make_mesh, local_mesh  # noqa: F401

@@ -1,0 +1,81 @@
+"""Logical-axis sharding: map model-level dimension names to mesh axes.
+
+Models annotate parameters and activations with *logical* axis names
+("heads", "ff", "vocab", "batch", ...).  A per-arch rule table (see
+``repro.configs.base``) maps logical names to physical mesh axes.  This
+keeps sharding decisions in configs — §Perf hillclimbs edit rules, not
+model code — and makes the same model run on (data, model) and
+(pod, data, model) meshes: rules naming absent mesh axes silently drop
+them (so ("pod", "data") degrades to ("data",) on a single-pod mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Mesh + logical rules threaded through model apply functions.
+
+    mesh=None disables all constraints (single-device smoke tests)."""
+
+    mesh: Optional[Mesh]
+    rules: Mapping[str, object]
+
+    def _resolve(self, logical: Optional[str]):
+        if logical is None or self.mesh is None:
+            return None
+        phys = self.rules.get(logical)
+        if phys is None:
+            return None
+        axes = (phys,) if isinstance(phys, str) else tuple(phys)
+        present = tuple(a for a in axes if a in self.mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self._resolve(l) for l in logical))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+    def axis_size(self, logical: str) -> int:
+        """Number of shards a logical axis maps onto."""
+        from repro.distributed.mesh_utils import mesh_axis_size
+
+        if self.mesh is None:
+            return 1
+        return mesh_axis_size(self.mesh, self.rules.get(logical))
+
+    def mesh_axes(self, logical: str):
+        """Physical axis name(s) for shard_map code, or None."""
+        return self._resolve(logical)
+
+
+def params_sharding(axes_tree, ctx: ParallelCtx):
+    """Map a tree of logical-axis tuples to NamedShardings (for in_shardings
+    / checkpoint layout).  Leaves of ``axes_tree`` are tuples of logical
+    names (None entries = replicated dims), mirroring the params tree."""
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(
+        lambda axes: ctx.sharding(*axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

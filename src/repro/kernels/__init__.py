@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the paper's compute hot-spots (NMSLIB's
+# SIMD-accelerated distance scans):
+#   mips_topk.py     fused tiled MIPS + streaming top-k (VMEM-resident heap)
+#   sparse_dense.py  fused sparse+dense scoring (the paper's novel mixed
+#                    representation, one pass)
+# ops.py = jitted wrappers (library drop-ins); ref.py = pure-jnp oracles.
+# Validated in interpret mode (tests/test_kernels.py); TPU is the target
+# (BlockSpec tiling notes in each kernel's docstring).
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,66 @@
+"""Jitted public wrappers for the Pallas kernels, with padding and
+integration glue (so the retrieval core can call them as drop-ins).
+
+``interpret`` defaults to True in this container (CPU); on a real TPU the
+launcher flips it to False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.brute_force import TopK
+from repro.core.sparse import SparseVectors, densify
+from repro.kernels.mips_topk import mips_topk_pallas
+from repro.kernels.sparse_dense import fused_score_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "space", "interpret"))
+def mips_topk(queries: jax.Array, corpus: jax.Array, k: int,
+              tile_n: int = 2048, space: str = "ip",
+              interpret: bool = True) -> TopK:
+    """Kernelised exact k-NN over a dense corpus (pads N up to tile_n)."""
+    n = corpus.shape[0]
+    tile_n = min(tile_n, n) if n % min(tile_n, n) == 0 else tile_n
+    padded = (n + tile_n - 1) // tile_n * tile_n
+    if padded != n:
+        corpus = jnp.pad(corpus, ((0, padded - n), (0, 0)))
+    s, i = mips_topk_pallas(queries, corpus, k, tile_n=tile_n, n_valid=n,
+                            space=space, interpret=interpret)
+    return TopK(s, i)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vocab_size", "w_dense", "w_sparse",
+                                    "tile_n", "interpret"))
+def fused_scores(q_sparse: SparseVectors, q_dense: jax.Array,
+                 c_sparse: SparseVectors, c_dense: jax.Array,
+                 vocab_size: int, w_dense: float = 1.0, w_sparse: float = 1.0,
+                 tile_n: int = 1024, interpret: bool = True) -> jax.Array:
+    """Kernelised fused sparse+dense scoring [B, N] (FusedSpace drop-in)."""
+    qd = densify(q_sparse, vocab_size)
+    qd = jnp.pad(qd, ((0, 0), (0, 1)))          # zero trash column for pad ids
+    n = c_dense.shape[0]
+    tile = min(tile_n, n)
+    padded = (n + tile - 1) // tile * tile
+    ci, cv, cd = c_sparse.indices, c_sparse.values, c_dense
+    if padded != n:
+        ci = jnp.pad(ci, ((0, padded - n), (0, 0)), constant_values=vocab_size)
+        cv = jnp.pad(cv, ((0, padded - n), (0, 0)))
+        cd = jnp.pad(cd, ((0, padded - n), (0, 0)))
+    out = fused_score_pallas(qd, q_dense, ci, cv, cd, w_dense, w_sparse,
+                             tile_n=tile, interpret=interpret)
+    return out[:, :n]
+
+
+def fused_topk(q_sparse: SparseVectors, q_dense: jax.Array,
+               c_sparse: SparseVectors, c_dense: jax.Array,
+               vocab_size: int, k: int, w_dense: float = 1.0,
+               w_sparse: float = 1.0, interpret: bool = True) -> TopK:
+    s = fused_scores(q_sparse, q_dense, c_sparse, c_dense, vocab_size,
+                     w_dense, w_sparse, interpret=interpret)
+    vals, idx = jax.lax.top_k(s, k)
+    return TopK(vals, idx.astype(jnp.int32))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (delegating to the system's own
+library paths so kernel tests also pin the library semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mips_topk_ref(queries: jax.Array, corpus: jax.Array, k: int,
+                  n_valid: int | None = None, space: str = "ip"):
+    """Exact top-k via full score matrix + lax.top_k."""
+    q = queries.astype(jnp.float32)
+    c = corpus.astype(jnp.float32)
+    s = q @ c.T
+    if space == "l2":
+        s = 2.0 * s - jnp.sum(q * q, axis=1, keepdims=True) - jnp.sum(c * c, axis=1)[None, :]
+    if n_valid is not None:
+        mask = jnp.arange(c.shape[0])[None, :] < n_valid
+        s = jnp.where(mask, s, jnp.finfo(jnp.float32).min)
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def fused_score_ref(qdensified: jax.Array, q_dense: jax.Array,
+                    c_idx: jax.Array, c_val: jax.Array, c_dense: jax.Array,
+                    w_dense: float, w_sparse: float):
+    dense = q_dense.astype(jnp.float32) @ c_dense.astype(jnp.float32).T
+    picked = qdensified.astype(jnp.float32)[:, c_idx]           # [B, N, NNZ]
+    sparse = jnp.einsum("bnk,nk->bn", picked, c_val.astype(jnp.float32))
+    return w_dense * dense + w_sparse * sparse

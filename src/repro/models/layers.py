@@ -1,0 +1,354 @@
+"""Composable transformer layers: norms, SwiGLU, RoPE, GQA + MLA attention.
+
+Functional style: ``init_*`` returns ``(params, axes)`` — two parallel
+nested dicts, the second holding *logical axis names* per parameter dim
+(see ``repro.distributed.sharding``).  ``apply``-side functions take a
+``ParallelCtx`` for activation sharding constraints; with ``mesh=None``
+everything runs unconstrained on one device (smoke tests).
+
+Attention is computed with a chunked online-softmax ("flash") formulation
+in pure JAX — mandatory for the 32k prefill shapes, where a naive [S, S]
+score matrix would be ~2^40 bytes.  Head-count padding for TP divisibility
+multiplies padded heads by a zero mask so semantics match the unpadded
+model exactly (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import ParallelCtx
+
+
+# ---------------------------------------------------------------------------
+# Param init helpers.
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], axes, dtype):
+    shape = (in_dim, *out_shape)
+    return _normal(key, shape, 1.0 / math.sqrt(in_dim), dtype), axes
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Tuple[dict, dict]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D] (D even), positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure JAX online softmax.
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,            # [B, Sq, H, Dk]
+    k: jax.Array,            # [B, Skv, H, Dk]
+    v: jax.Array,            # [B, Skv, H, Dv]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    chunk_q: int = 1024,
+    chunk_kv: int = 1024,
+    kv_valid_len: Optional[jax.Array] = None,   # mask keys >= this (decode)
+    unroll: bool = False,    # dry-run probes: unroll chunk loops so
+                             # cost_analysis counts every trip exactly
+) -> jax.Array:
+    b, sq, h, dk = q.shape
+    skv, dv = k.shape[1], v.shape[-1]
+    scale = 1.0 / math.sqrt(dk)
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    assert sq % cq == 0 and skv % ckv == 0, (sq, cq, skv, ckv)
+    nq, nk = sq // cq, skv // ckv
+
+    q = q * scale
+
+    def one_q_chunk(qi, qc):
+        # qc: [B, cq, H, Dk]
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def body(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * ckv, ckv, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * ckv, ckv, axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            kpos = ki * ckv + jnp.arange(ckv)
+            neg = jnp.finfo(jnp.float32).min
+            if causal:
+                s = jnp.where(qpos[None, None, :, None] >= kpos[None, None, None, :], s, neg)
+            if kv_valid_len is not None:
+                s = jnp.where(kpos[None, None, None, :] < kv_valid_len[:, None, None, None], s, neg)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, cq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32),
+            jnp.zeros((b, h, cq, dv), jnp.float32),
+        )
+        # flash-bwd memory contract: the [cq, ckv] score/probability tiles
+        # are RECOMPUTED in the backward pass, never saved as residuals
+        # (without this, bwd keeps nq*nk f32 tiles live — gigabytes/layer).
+        tile_body = jax.checkpoint(body)
+        (m, l, acc), _ = jax.lax.scan(tile_body, init, jnp.arange(nk),
+                                      unroll=nk if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 2, 1, 3)).astype(v.dtype)   # [B, cq, H, Dv]
+
+    if nq == 1:
+        return one_q_chunk(0, q)
+    qr = jnp.moveaxis(q.reshape(b, nq, cq, h, dk), 1, 0)          # [nq, B, cq, H, Dk]
+    _, outs = jax.lax.scan(lambda c, inp: (c, one_q_chunk(inp[0], inp[1])),
+                           None, (jnp.arange(nq), qr),
+                           unroll=nq if unroll else 1)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (with optional QKV bias — qwen2.5) + decode w/ KV cache.
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: TransformerConfig, dtype):
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hp, hkv = cfg.padded_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], d, (hp, dh), ("embed", "heads", None), dtype)
+    p["wk"], a["wk"] = dense_init(ks[1], d, (hkv, dh), ("embed", "kv_heads", None), dtype)
+    p["wv"], a["wv"] = dense_init(ks[2], d, (hkv, dh), ("embed", "kv_heads", None), dtype)
+    p["wo"], a["wo"] = dense_init(ks[3], hp * dh, (d,), None, dtype)
+    p["wo"] = p["wo"].reshape(hp, dh, d)
+    a["wo"] = ("heads", None, "embed")
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, dh), dtype); a["bq"] = ("heads", None)
+        p["bk"] = jnp.zeros((hkv, dh), dtype); a["bk"] = ("kv_heads", None)
+        p["bv"] = jnp.zeros((hkv, dh), dtype); a["bv"] = ("kv_heads", None)
+    return p, a
+
+
+def _head_mask(cfg: TransformerConfig, dtype):
+    """Zero-mask for TP head padding.  GQA pads *within each KV group* so
+    the padded head -> KV group mapping (h // group_size) matches the
+    unpadded model exactly: real head (g, w) sits at g*gpad + w."""
+    hp = cfg.padded_heads
+    if hp == cfg.n_heads:
+        return None
+    if cfg.attention == "mla":
+        return (jnp.arange(hp) < cfg.n_heads).astype(dtype)
+    hkv = cfg.n_kv_heads
+    assert hp % hkv == 0, f"pad_heads_to {hp} must be a multiple of kv heads {hkv}"
+    gpad = hp // hkv
+    rep_real = cfg.n_heads // hkv
+    return ((jnp.arange(hp) % gpad) < rep_real).astype(dtype)
+
+
+def gqa_apply(params, x, positions, cfg: TransformerConfig, ctx: ParallelCtx,
+              causal=True, q_offset=0):
+    """Training/prefill attention over full sequences."""
+    b, s, _ = x.shape
+    hp, hkv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    rep = hp // hkv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    out = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                          unroll=cfg.attn_unroll)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def gqa_decode(params, x, cache_k, cache_v, pos, cfg: TransformerConfig,
+               ctx: ParallelCtx):
+    """One-token decode.  x: [B, 1, d]; cache_[kv]: [B, Smax, Hkv, Dh];
+    pos: i32[] current length (tokens 0..pos-1 are valid)."""
+    b = x.shape[0]
+    hp, hkv, dh = cfg.padded_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    rep = hp // hkv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    kk = jnp.repeat(cache_k, rep, axis=2)
+    vv = jnp.repeat(cache_v, rep, axis=2)
+    valid = jnp.full((b,), pos + 1, jnp.int32)
+    out = flash_attention(q, kk, vv, causal=False, kv_valid_len=valid,
+                          chunk_q=1, chunk_kv=cfg.attn_chunk_kv)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (MiniCPM3 / DeepSeek-V2 style) + absorbed decode.
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: TransformerConfig, dtype):
+    d = cfg.d_model
+    hp = cfg.padded_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq_a"], a["wq_a"] = dense_init(ks[0], d, (qr,), ("embed", None), dtype)
+    p["q_norm"], a["q_norm"] = {"scale": jnp.ones((qr,), dtype)}, {"scale": (None,)}
+    p["wq_b"], a["wq_b"] = dense_init(ks[1], qr, (hp, dn + dr), (None, "heads", None), dtype)
+    p["wkv_a"], a["wkv_a"] = dense_init(ks[2], d, (kvr + dr,), ("embed", None), dtype)
+    p["kv_norm"], a["kv_norm"] = {"scale": jnp.ones((kvr,), dtype)}, {"scale": (None,)}
+    p["wk_b"], a["wk_b"] = dense_init(ks[3], kvr, (hp, dn), (None, "heads", None), dtype)
+    p["wv_b"], a["wv_b"] = dense_init(ks[4], kvr, (hp, dv), (None, "heads", None), dtype)
+    p["wo"], a["wo"] = dense_init(ks[5], hp * dv, (d,), None, dtype)
+    p["wo"] = p["wo"].reshape(hp, dv, d)
+    a["wo"] = ("heads", None, "embed")
+    return p, a
+
+
+def _mla_qkv(params, x, positions, cfg: TransformerConfig):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    kvr = cfg.kv_lora_rank
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv_pe = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv, k_pe = ckv_pe[..., :kvr], ckv_pe[..., kvr:]
+    ckv = rmsnorm(params["kv_norm"], ckv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_apply(params, x, positions, cfg: TransformerConfig, ctx: ParallelCtx,
+              causal=True, q_offset=0):
+    """Training/prefill MLA: expand latents to per-head K/V, flash attend."""
+    hp = cfg.padded_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_pe, ckv, k_pe = _mla_qkv(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["wv_b"])
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (*k_nope.shape[:3], dr))], axis=-1)
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    out = flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                          unroll=cfg.attn_unroll)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def mla_decode(params, x, cache_ckv, cache_kpe, pos, cfg: TransformerConfig,
+               ctx: ParallelCtx):
+    """Absorbed-matmul MLA decode (the production path): scores are computed
+    directly against the *compressed* latent cache — W_uk is absorbed into
+    the query and W_uv applied after attention, so per step we touch
+    kv_lora+rope bytes per cached token instead of H*(dk+dv).
+
+    x: [B, 1, d]; cache_ckv: [B, Smax, kvr]; cache_kpe: [B, Smax, dr]."""
+    b = x.shape[0]
+    hp = cfg.padded_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_pe, ckv_new, kpe_new = _mla_qkv(params, x, posv, cfg)
+
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv_new.astype(cache_ckv.dtype), pos, axis=1)
+    cache_kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache_kpe, kpe_new[:, :, 0, :].astype(cache_kpe.dtype), pos, axis=1)
+
+    # absorb W_uk: q_lat[b,h,c] = sum_k q_nope[b,1,h,k] wk_b[c,h,k]
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["wk_b"])
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv) +
+         jnp.einsum("bhk,bsk->bhs", q_pe[:, 0], cache_kpe)) * scale
+    s = s.astype(jnp.float32)
+    valid = jnp.arange(cache_ckv.shape[1])[None, None, :] <= pos
+    s = jnp.where(valid, s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_ckv.dtype)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", p, cache_ckv)
+    # apply W_uv per head, then output proj
+    out = jnp.einsum("bhr,rhk->bhk", ctx_lat, params["wv_b"])
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, :, None]
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None, :]
+    return y, cache_ckv, cache_kpe
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN.
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w_in"], a["w_in"] = dense_init(ks[0], d, (d_ff,), ("embed", "ff"), dtype)
+    p["w_gate"], a["w_gate"] = dense_init(ks[1], d, (d_ff,), ("embed", "ff"), dtype)
+    p["w_out"], a["w_out"] = dense_init(ks[2], d_ff, (d,), ("ff", "embed"), dtype)
+    return p, a
+
+
+def swiglu_apply(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+    return h @ params["w_out"]

@@ -1,0 +1,251 @@
+"""Causal LM transformer: GQA / MLA attention, optional MoE, scan-over-
+layers with per-layer remat, chunked cross-entropy (never materialises
+[B, S, V] logits), KV-cache decode and prefill steps.
+
+Five assigned architectures instantiate this module (qwen2.5-3b,
+minicpm3-4b/MLA, smollm-360m, phi3.5-moe, arctic-480b).  In the retrieval
+system these models are (a) dense encoders for k-NN candidate generation
+and (b) cross-encoder re-rankers (paper's CEDR proxy-scorer role) — see
+``repro.models.encoder``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import ParallelCtx
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: TransformerConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.attention == "mla":
+        p["attn"], a["attn"] = L.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"], a["attn"] = L.gqa_init(ks[0], cfg, dtype)
+    p["ln2"], a["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.is_moe:
+        p["moe"], a["moe"] = M.moe_init(ks[1], cfg, dtype)
+        if cfg.dense_residual:
+            p["ln3"], a["ln3"] = L.rmsnorm_init(cfg.d_model, dtype)
+            p["ffn"], a["ffn"] = L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ffn"], a["ffn"] = L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p, a
+
+
+def init_transformer(key, cfg: TransformerConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["embed"] = (jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model)) * 0.02
+                  ).astype(dtype)
+    a["embed"] = ("vocab", "embed")
+
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    bp = jax.vmap(lambda k: init_block(k, cfg, dtype)[0])(block_keys)
+    # vmap stacks arrays along a leading layer axis; axes tree gains None.
+    ba_single = init_block(jax.random.PRNGKey(0), cfg, dtype)[1]
+    p["blocks"] = bp
+    a["blocks"] = jax.tree.map(
+        lambda ax: (None, *ax), ba_single,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x),
+    )
+    p["ln_f"], a["ln_f"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.padded_vocab))
+                        * 0.02).astype(dtype)
+        a["lm_head"] = ("embed", "vocab")
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+def block_apply(bp, x, positions, cfg: TransformerConfig, ctx: ParallelCtx):
+    attn_fn = L.mla_apply if cfg.attention == "mla" else L.gqa_apply
+    x = x + attn_fn(bp["attn"], L.rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                    positions, cfg, ctx)
+    if cfg.seq_shard:
+        x = ctx.constrain(x, "batch", "seq_act", None)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        mo, aux = M.moe_apply(bp["moe"], h, cfg, ctx)
+        if cfg.dense_residual:
+            mo = mo + L.swiglu_apply(bp["ffn"], L.rmsnorm(bp["ln3"], x, cfg.norm_eps))
+        x = x + mo
+    else:
+        x = x + L.swiglu_apply(bp["ffn"], L.rmsnorm(bp["ln2"], x, cfg.norm_eps))
+    if cfg.seq_shard:
+        x = ctx.constrain(x, "batch", "seq_act", None)
+    return x, aux
+
+
+def backbone(params, tokens, cfg: TransformerConfig, ctx: ParallelCtx):
+    """Embed + all blocks + final norm.  Returns (hidden [B,S,d], aux)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = ctx.constrain(x, "batch", "seq_act", None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a = block_apply(bp, x, positions, cfg, ctx)
+        return (x, aux + a), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux / cfg.n_layers
+
+
+def _head_matrix(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_ce_loss(params, hidden, targets, cfg: TransformerConfig,
+                    ctx: ParallelCtx, chunk: int = 512):
+    """Cross entropy without materialising [B, S, V]: scan over sequence
+    chunks, computing logits + logsumexp per chunk (vocab stays sharded)."""
+    b, s, d = hidden.shape
+    head = _head_matrix(params, cfg)
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    hs = jnp.moveaxis(hidden.reshape(b, n, c, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, n, c), 1, 0)
+
+    neg = jnp.finfo(jnp.float32).min
+    vocab_mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+                  if cfg.padded_vocab != cfg.vocab_size else None)
+
+    def body(tot, inp):
+        h, t = inp
+        logits = (h @ head).astype(jnp.float32)            # [B, c, Vp]
+        if vocab_mask is not None:
+            logits = jnp.where(vocab_mask, logits, neg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts),
+                            unroll=n if cfg.ce_unroll else 1)
+    return total / (b * s)
+
+
+def lm_loss(params, batch, cfg: TransformerConfig, ctx: ParallelCtx,
+            aux_weight: float = 0.01):
+    hidden, aux = backbone(params, batch["tokens"], cfg, ctx)
+    loss = chunked_ce_loss(params, hidden, batch["targets"], cfg, ctx)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache.
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Optional[jax.Array] = None      # [L, B, S, Hkv, Dh]     (GQA)
+    v: Optional[jax.Array] = None
+    ckv: Optional[jax.Array] = None    # [L, B, S, kv_lora]     (MLA)
+    kpe: Optional[jax.Array] = None    # [L, B, S, rope_dim]
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> KVCache:
+    dt = jnp.dtype(cfg.dtype)
+    lcount = cfg.n_layers
+    if cfg.attention == "mla":
+        return KVCache(
+            ckv=jnp.zeros((lcount, batch, max_len, cfg.kv_lora_rank), dt),
+            kpe=jnp.zeros((lcount, batch, max_len, cfg.qk_rope_head_dim), dt),
+        )
+    dh = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((lcount, batch, max_len, cfg.n_kv_heads, dh), dt),
+        v=jnp.zeros((lcount, batch, max_len, cfg.n_kv_heads, dh), dt),
+    )
+
+
+def cache_axes(cfg: TransformerConfig):
+    """Logical axes of the cache pytree (for shardings)."""
+    if cfg.attention == "mla":
+        return KVCache(ckv=(None, "batch", "kv_seq", None),
+                       kpe=(None, "batch", "kv_seq", None))
+    return KVCache(k=(None, "batch", "kv_seq", "kv_heads", None),
+                   v=(None, "batch", "kv_seq", "kv_heads", None))
+
+
+def decode_step(params, cache: KVCache, tokens, pos, cfg: TransformerConfig,
+                ctx: ParallelCtx):
+    """One-token decode.  tokens: [B, 1]; pos: scalar i32 (current length).
+    Returns (logits [B, V], new cache)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    if cfg.attention == "mla":
+        def body(x, inp):
+            bp, ckv, kpe = inp
+            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            att, ckv, kpe = L.mla_decode(bp["attn"], h, ckv, kpe, pos, cfg, ctx)
+            x = x + att
+            x = _block_mlp(bp, x, cfg, ctx)
+            return x, (ckv, kpe)
+
+        x, (ckv, kpe) = jax.lax.scan(body, x, (params["blocks"], cache.ckv, cache.kpe))
+        new_cache = KVCache(ckv=ckv, kpe=kpe)
+    else:
+        def body(x, inp):
+            bp, ck, cv = inp
+            h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+            att, ck, cv = _gqa_decode_reshaped(bp["attn"], h, ck, cv, pos, cfg, ctx)
+            x = x + att
+            x = _block_mlp(bp, x, cfg, ctx)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+        new_cache = KVCache(k=ck, v=cv)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, 0, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, jnp.finfo(jnp.float32).min)
+    return logits, new_cache
+
+
+def _gqa_decode_reshaped(ap, h, ck, cv, pos, cfg, ctx):
+    # layers.gqa_decode expects [B, S, Hkv, Dh] — cache already so.
+    return L.gqa_decode(ap, h, ck, cv, pos, cfg, ctx)
+
+
+def _block_mlp(bp, x, cfg, ctx):
+    if cfg.is_moe:
+        h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        mo, _ = M.moe_apply(bp["moe"], h, cfg, ctx)
+        if cfg.dense_residual:
+            mo = mo + L.swiglu_apply(bp["ffn"], L.rmsnorm(bp["ln3"], x, cfg.norm_eps))
+        return x + mo
+    return x + L.swiglu_apply(bp["ffn"], L.rmsnorm(bp["ln2"], x, cfg.norm_eps))
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig, ctx: ParallelCtx):
+    """Inference prefill: full forward returning last-position logits.
+    (The dry-run's prefill cells lower this; KV-cache population shares the
+    same FLOP/byte profile and is elided from the lowered artifact.)"""
+    hidden, _ = backbone(params, tokens, cfg, ctx)
+    logits = (hidden[:, -1, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return logits

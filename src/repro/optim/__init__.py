@@ -1,0 +1,1 @@
+from repro.optim.optimizer import Optimizer, make_optimizer, cosine_schedule  # noqa: F401

@@ -1,0 +1,87 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Cross-pod links (DCN) are an order of magnitude slower than intra-pod ICI,
+so the training driver can compress the *pod-level* gradient exchange:
+
+  * ``topk``  — magnitude top-k sparsification with **error feedback**
+    (Stich et al. 2018): the un-transmitted residual is added back into the
+    next step's gradient, preserving convergence (test:
+    ``tests/test_optim.py`` shows EF closes the convergence gap on a
+    quadratic).
+  * ``int8``  — per-leaf symmetric int8 quantisation with f32 scale
+    (8x wire reduction, unbiased up to rounding).
+
+Both are expressed as pytree transforms ``compress -> (wire, aux)`` /
+``decompress`` so they can wrap any collective.  In the GSPMD training
+step, cross-pod gradient reduction is implicit; ``repro.launch.train``
+applies compression in the explicit shard_map DP-reduce variant and the
+effect on the collective roofline term is reported in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKCompressed(NamedTuple):
+    values: jax.Array
+    indices: jax.Array
+    shape: tuple
+
+
+def topk_compress(g: jax.Array, ratio: float) -> TopKCompressed:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return TopKCompressed(flat[idx], idx.astype(jnp.int32), g.shape)
+
+
+def topk_decompress(c: TopKCompressed) -> jax.Array:
+    n = 1
+    for s in c.shape:
+        n *= s
+    flat = jnp.zeros((n,), c.values.dtype).at[c.indices].set(c.values)
+    return flat.reshape(c.shape)
+
+
+def ef_topk_step(g: jax.Array, residual: jax.Array, ratio: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback top-k: returns (transmitted gradient, new residual)."""
+    corrected = g + residual
+    wire = topk_decompress(topk_compress(corrected, ratio))
+    return wire, corrected - wire
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def ef_compress_tree(grads, residuals, ratio: float):
+    out = jax.tree.map(lambda g, r: ef_topk_step(g.astype(jnp.float32), r, ratio),
+                       grads, residuals)
+    wire = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return wire, res
+
+
+class Int8Compressed(NamedTuple):
+    q: jax.Array
+    scale: jax.Array
+
+
+def int8_compress(g: jax.Array) -> Int8Compressed:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    return Int8Compressed(jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8),
+                          scale)
+
+
+def int8_decompress(c: Int8Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def int8_roundtrip_tree(grads):
+    return jax.tree.map(lambda g: int8_decompress(int8_compress(g.astype(jnp.float32))),
+                        grads)

@@ -1,0 +1,160 @@
+"""Optimizers: AdamW and Adafactor, pure-JAX pytree implementations.
+
+Sharding-preserving: optimizer states mirror parameter shapes, so GSPMD
+propagates parameter shardings onto them (Adafactor's factored second
+moments shrink the arctic-480B state by ~3 orders of magnitude — the reason
+its config selects it; DESIGN.md §5).
+
+Schedules are plain callables step -> lr so they can be traced inside the
+jitted train step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: object
+    v: object
+
+
+def _adamw_init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(jnp.zeros((), jnp.int32), jax.tree.map(z, params),
+                     jax.tree.map(z, params))
+
+
+def _adamw_update(grads, state: AdamState, params, lr, b1=0.9, b2=0.95,
+                  eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamState(step, new_m, new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moments, no first
+# moment: O(n+m) state for an n x m matrix.
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: object     # row factors (or full v for <2D leaves)
+    vc: object     # col factors (zeros-placeholder for <2D leaves)
+
+
+def _fact_init(p):
+    if p.ndim >= 2:
+        return (jnp.zeros(p.shape[:-1], jnp.float32),
+                jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32))
+    return (jnp.zeros_like(p, dtype=jnp.float32), jnp.zeros((1,), jnp.float32))
+
+
+def _adafactor_init(params):
+    pairs = jax.tree.map(_fact_init, params)
+    vr = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return AdafactorState(jnp.zeros((), jnp.int32), vr, vc)
+
+
+def _adafactor_update(grads, state: AdafactorState, params, lr,
+                      decay=0.8, eps=1e-30, weight_decay=0.0, clip_thr=1.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / jnp.sqrt(jnp.maximum(r[..., None] * vc[..., None, :], eps))
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g / jnp.sqrt(jnp.maximum(vr, eps))
+        # update clipping (RMS <= clip_thr)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_thr)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_vr = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_vc = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdafactorState(step, new_vr, new_vc)
+
+
+# ---------------------------------------------------------------------------
+# Facade.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable           # (grads, state, params, lr) -> (params, state)
+    clip_norm: float = 1.0
+
+    def step(self, grads, state, params, lr):
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        return self.update(grads, state, params, lr)
+
+
+def make_optimizer(name: str, clip_norm: float = 1.0, **kw) -> Optimizer:
+    if name == "adamw":
+        return Optimizer("adamw", _adamw_init,
+                         functools.partial(_adamw_update, **kw), clip_norm)
+    if name == "adafactor":
+        return Optimizer("adafactor", _adafactor_init,
+                         functools.partial(_adafactor_update, **kw), clip_norm)
+    raise ValueError(name)

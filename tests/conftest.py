@@ -1,0 +1,30 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+# and benches must see 1 device (the dry-run sets 512 for itself only).
+# Multi-device tests spawn subprocesses with their own XLA_FLAGS.
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet with a forced host device count (multi-device
+    tests can't change device count in-process once jax initialises)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+            f"STDERR:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess_devices

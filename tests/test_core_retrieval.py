@@ -1,0 +1,180 @@
+"""Core retrieval library: exactness, recall, and structural invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DenseSpace, FusedSpace, FusedVectors, SparseSpace,
+                        beam_search, build_inverted_index, build_napp,
+                        daat_topk, exact_topk, napp_search, nn_descent,
+                        streaming_topk)
+from repro.core.brute_force import merge_topk, TopK
+from repro.core.sparse import (SparseVectors, densify, from_dense,
+                               sparse_inner_qbatch_docs, sparse_inner_tiled,
+                               sparse_inner_one_to_one)
+
+
+@pytest.fixture(scope="module")
+def dense_data():
+    q = jax.random.normal(jax.random.PRNGKey(0), (6, 32))
+    c = jax.random.normal(jax.random.PRNGKey(1), (512, 32))
+    return q, c
+
+
+def _np_topk_ids(q, c, k):
+    return np.argsort(-(np.asarray(q) @ np.asarray(c).T), axis=1)[:, :k]
+
+
+class TestBruteForce:
+    def test_exact_matches_numpy(self, dense_data):
+        q, c = dense_data
+        tk = exact_topk(DenseSpace("ip"), q, c, 8)
+        assert np.array_equal(np.asarray(tk.indices), _np_topk_ids(q, c, 8))
+
+    def test_streaming_equals_exact(self, dense_data):
+        q, c = dense_data
+        a = exact_topk(DenseSpace("ip"), q, c, 8)
+        b = streaming_topk(DenseSpace("ip"), q, c, 8, tile_n=64)
+        assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+        np.testing.assert_allclose(np.asarray(a.scores), np.asarray(b.scores),
+                                   rtol=1e-5)
+
+    def test_l2_space_orders_by_distance(self, dense_data):
+        q, c = dense_data
+        tk = exact_topk(DenseSpace("l2"), q, c, 5)
+        d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(c)[None], axis=-1)
+        want = np.argsort(d, axis=1)[:, :5]
+        assert np.array_equal(np.asarray(tk.indices), want)
+
+    def test_padding_rows_never_win(self, dense_data):
+        q, c = dense_data
+        big = jnp.concatenate([c, 100.0 * jnp.ones((64, 32))])
+        tk = exact_topk(DenseSpace("ip"), q, big, 8, n_valid=512)
+        assert np.all(np.asarray(tk.indices) < 512)
+
+    def test_merge_topk(self):
+        parts = TopK(jnp.asarray([[1.0, 5.0, 3.0, 2.0]]),
+                     jnp.asarray([[10, 11, 12, 13]], dtype=jnp.int32))
+        out = merge_topk(parts, 2)
+        assert out.indices.tolist() == [[11, 12]]
+
+
+class TestSparse:
+    def test_from_dense_roundtrip(self):
+        rng = np.random.default_rng(0)
+        dense = rng.uniform(size=(5, 40)) * (rng.uniform(size=(5, 40)) > 0.8)
+        sp = from_dense(jnp.asarray(dense, jnp.float32), 16)
+        back = densify(sp, 40)
+        np.testing.assert_allclose(np.asarray(back), dense, rtol=1e-6)
+
+    def test_truncation_keeps_largest(self):
+        dense = jnp.asarray([[0.1, 5.0, 0.2, 4.0, 0.05]], jnp.float32)
+        sp = from_dense(dense, 2)
+        kept = set(np.asarray(sp.indices)[0].tolist())
+        assert kept == {1, 3}
+
+    def test_qbatch_scores_match_dense(self):
+        rng = np.random.default_rng(1)
+        dq = rng.uniform(size=(4, 30)) * (rng.uniform(size=(4, 30)) > 0.7)
+        dd = rng.uniform(size=(64, 30)) * (rng.uniform(size=(64, 30)) > 0.85)
+        sq = from_dense(jnp.asarray(dq, jnp.float32), 12)
+        sd = from_dense(jnp.asarray(dd, jnp.float32), 12)
+        got = sparse_inner_qbatch_docs(sq, sd, 30)
+        want = np.asarray(densify(sq, 30)) @ np.asarray(densify(sd, 30)).T
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+        got_t = sparse_inner_tiled(sq, sd, 30, tile_n=16)
+        np.testing.assert_allclose(np.asarray(got_t), want, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_pairwise_symmetry(self, seed):
+        rng = np.random.default_rng(seed)
+        d = rng.uniform(size=(2, 20)) * (rng.uniform(size=(2, 20)) > 0.6)
+        s = from_dense(jnp.asarray(d, jnp.float32), 10)
+        a = sparse_inner_one_to_one(
+            SparseVectors(s.indices[:1], s.values[:1]),
+            SparseVectors(s.indices[1:], s.values[1:]), 20)
+        b = sparse_inner_one_to_one(
+            SparseVectors(s.indices[1:], s.values[1:]),
+            SparseVectors(s.indices[:1], s.values[:1]), 20)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+class TestFusedSpace:
+    def test_linear_in_weights(self, dense_data):
+        q, c = dense_data
+        rng = np.random.default_rng(2)
+        dq = rng.uniform(size=(6, 30)) * (rng.uniform(size=(6, 30)) > 0.7)
+        dd = rng.uniform(size=(512, 30)) * (rng.uniform(size=(512, 30)) > 0.9)
+        sq = from_dense(jnp.asarray(dq, jnp.float32), 10)
+        sd = from_dense(jnp.asarray(dd, jnp.float32), 10)
+        fq, fd = FusedVectors(q, sq), FusedVectors(c, sd)
+        s_d = FusedSpace(30, w_dense=1.0, w_sparse=0.0).score_batch(fq, fd)
+        s_s = FusedSpace(30, w_dense=0.0, w_sparse=1.0).score_batch(fq, fd)
+        s_mix = FusedSpace(30, w_dense=0.3, w_sparse=0.7).score_batch(fq, fd)
+        np.testing.assert_allclose(np.asarray(s_mix),
+                                   0.3 * np.asarray(s_d) + 0.7 * np.asarray(s_s),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestInvertedIndex:
+    def test_daat_equals_sparse_scores(self):
+        rng = np.random.default_rng(3)
+        dd = rng.uniform(size=(128, 50)) * (rng.uniform(size=(128, 50)) > 0.85)
+        dq = rng.uniform(size=(4, 50)) * (rng.uniform(size=(4, 50)) > 0.8)
+        sd = from_dense(jnp.asarray(dd, jnp.float32), 16)
+        sq = from_dense(jnp.asarray(dq, jnp.float32), 16)
+        index = build_inverted_index(sd, 50)
+        assert index.truncated_terms == 0
+        tk = daat_topk(index, sq, 10)
+        dense_scores = np.asarray(sparse_inner_qbatch_docs(sq, sd, 50))
+        want = np.sort(dense_scores, axis=1)[:, ::-1][:, :10]
+        np.testing.assert_allclose(np.asarray(tk.scores), want, rtol=1e-5)
+
+
+class TestANN:
+    def test_graph_ann_recall(self, dense_data):
+        q, c = dense_data
+        space = DenseSpace("ip")
+        gi = nn_descent(space, c, 512, degree=8, rounds=5, node_block=64)
+        tk = beam_search(space, q, c, gi, 512, k=10, ef=48, hops=8)
+        want = _np_topk_ids(q, c, 10)
+        rec = np.mean([len(set(np.asarray(tk.indices)[i]) & set(want[i])) / 10
+                       for i in range(q.shape[0])])
+        assert rec >= 0.85, rec
+
+    def test_graph_ann_fused_space(self):
+        """The paper's headline capability: graph search over the MIXED
+        sparse+dense representation."""
+        rng = np.random.default_rng(4)
+        n, v = 256, 40
+        cd = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+        dd = rng.uniform(size=(n, v)) * (rng.uniform(size=(n, v)) > 0.8)
+        cs = from_dense(jnp.asarray(dd, jnp.float32), 12)
+        corpus = FusedVectors(cd, cs)
+        qd = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+        qs = from_dense(jnp.asarray(
+            rng.uniform(size=(4, v)) * (rng.uniform(size=(4, v)) > 0.7),
+            jnp.float32), 12)
+        queries = FusedVectors(qd, qs)
+        space = FusedSpace(v, w_dense=0.5, w_sparse=0.5)
+        gi = nn_descent(space, corpus, n, degree=8, rounds=5, node_block=64)
+        tk = beam_search(space, queries, corpus, gi, n, k=10, ef=48, hops=8)
+        want_scores = np.asarray(space.score_batch(queries, corpus))
+        want = np.argsort(-want_scores, axis=1)[:, :10]
+        rec = np.mean([len(set(np.asarray(tk.indices)[i]) & set(want[i])) / 10
+                       for i in range(4)])
+        assert rec >= 0.8, rec
+
+    def test_napp_recall(self, dense_data):
+        q, c = dense_data
+        space = DenseSpace("ip")
+        ni = build_napp(space, c, 512, num_pivots=64, num_index=6)
+        tk = napp_search(space, q, c, ni, k=10, num_search=12, min_times=1,
+                         rerank_qty=128)
+        want = _np_topk_ids(q, c, 10)
+        rec = np.mean([len(set(np.asarray(tk.indices)[i]) & set(want[i])) / 10
+                       for i in range(q.shape[0])])
+        assert rec >= 0.7, rec

@@ -1,0 +1,88 @@
+"""Data substrate: synthetic corpus structure, neighbor sampler, bitext."""
+
+import numpy as np
+import pytest
+
+from repro.data.sampler import CSRGraph, pad_subgraph, sample_subgraph
+from repro.data.synthetic import make_bitext, make_corpus, qrels_to_labels
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(n_docs=300, n_queries=40, n_topics=8,
+                       vocab_lemmas=400, seed=0)
+
+
+class TestSyntheticCorpus:
+    def test_every_query_has_source_rel2(self, corpus):
+        for rel in corpus.qrels:
+            assert 2 in rel.values()
+
+    def test_lemma_field_collapses_variants(self, corpus):
+        for toks, lems in zip(corpus.doc_tokens[:20], corpus.doc_lemmas[:20]):
+            np.testing.assert_array_equal(toks // corpus.n_variants, lems)
+
+    def test_vocab_bounds(self, corpus):
+        for rows, v in [(corpus.doc_tokens, corpus.vocab_tokens),
+                        (corpus.doc_lemmas, corpus.vocab_lemmas),
+                        (corpus.doc_bert, corpus.vocab_bert)]:
+            assert all(r.max() < v for r in rows if len(r))
+
+    def test_relevant_doc_shares_terms(self, corpus):
+        """Queries are sampled from their rel-2 doc; most lemmas overlap
+        (up to the paraphrase gap)."""
+        overlaps = []
+        for qi, rel in enumerate(corpus.qrels):
+            src = [d for d, g in rel.items() if g == 2][0]
+            q = set(corpus.q_lemmas[qi].tolist())
+            d = set(corpus.doc_lemmas[src].tolist())
+            overlaps.append(len(q & d) / len(q))
+        assert np.mean(overlaps) > 0.5
+
+    def test_labels_matrix(self, corpus):
+        cand = np.tile(np.arange(10), (len(corpus.qrels), 1))
+        labels = qrels_to_labels(corpus, cand)
+        assert labels.shape == (len(corpus.qrels), 10)
+        assert set(np.unique(labels)).issubset({0.0, 1.0, 2.0})
+
+    def test_bitext_padded(self, corpus):
+        q, d, v = make_bitext(corpus, "lemmas", max_q=8, max_d=16)
+        assert q.shape[1] == 8 and d.shape[1] == 16
+        assert q.max() <= v and d.max() <= v
+
+
+class TestNeighborSampler:
+    def test_fanout_shapes(self):
+        g = CSRGraph.random(500, avg_degree=8, seed=0)
+        seeds = np.arange(16)
+        sub = sample_subgraph(g, seeds, fanout=(5, 3), seed=1)
+        assert len(sub.blocks) == 2
+        assert len(sub.blocks[0].senders) == 16 * 5
+        # hop-2 expands every hop-1 sample
+        assert len(sub.blocks[1].senders) % 3 == 0
+
+    def test_edges_reference_local_table(self):
+        g = CSRGraph.random(200, avg_degree=4, seed=2)
+        sub = sample_subgraph(g, np.arange(8), fanout=(4, 2), seed=3)
+        n = len(sub.node_ids)
+        for blk in sub.blocks:
+            assert blk.senders.max() < n and blk.receivers.max() < n
+
+    def test_neighbors_are_true_neighbors(self):
+        g = CSRGraph.random(300, avg_degree=6, seed=4)
+        sub = sample_subgraph(g, np.arange(4), fanout=(5,), seed=5)
+        blk = sub.blocks[0]
+        for s, r, ok in zip(blk.senders, blk.receivers, blk.edge_mask):
+            if not ok:
+                continue
+            dst = sub.node_ids[r]
+            src = sub.node_ids[s]
+            nbrs = g.indices[g.indptr[dst]: g.indptr[dst + 1]]
+            assert src in nbrs
+
+    def test_padding(self):
+        g = CSRGraph.random(100, avg_degree=4, seed=6)
+        sub = sample_subgraph(g, np.arange(4), fanout=(3, 2), seed=7)
+        node_ids, snd, rcv, mask = pad_subgraph(sub, 128, [64, 64])
+        assert node_ids.shape == (128,)
+        assert snd.shape == rcv.shape == mask.shape == (128,)

@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a
+REDUCED same-family config for each of the 10 archs and run one
+forward/train step on CPU asserting output shapes + no NaNs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as reg
+from repro.configs.base import GNN_SHAPES
+from repro.distributed.sharding import ParallelCtx
+from repro.models import recsys as R
+from repro.models import schnet as S
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+
+CTX = ParallelCtx(None, {})
+
+LM_ARCHS = ["qwen2.5-3b", "minicpm3-4b", "smollm-360m",
+            "phi3.5-moe-42b-a6.6b", "arctic-480b"]
+RECSYS_ARCHS = ["bst", "din", "dien", "wide-deep"]
+
+
+def _finite_tree(tree):
+    return all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(tree))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = reg.get_smoke_config(arch)
+    params, _ = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    b, s = 2, 32
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, axis=1)}
+    opt = make_optimizer(cfg.optimizer)
+    opt_state = opt.init(params)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        T.lm_loss, has_aux=True)(params, batch, cfg, CTX)
+    assert np.isfinite(float(loss)), arch
+    assert _finite_tree(grads), arch
+    new_params, _ = opt.step(grads, opt_state, params, 1e-3)
+    assert _finite_tree(new_params), arch
+    # one more loss eval with updated params — training moved something
+    loss2, _ = T.lm_loss(new_params, batch, cfg, CTX)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode_shapes(arch):
+    cfg = reg.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, attn_chunk_q=1, attn_chunk_kv=32)
+    params, _ = T.init_transformer(jax.random.PRNGKey(0), cfg)
+    cache = T.init_cache(cfg, 2, 32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = T.decode_step(params, cache, tok, 3, cfg, CTX)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache updated in place at position 3
+    leaf = cache2.ckv if cfg.attention == "mla" else cache2.k
+    assert leaf.shape[0] == cfg.n_layers
+
+
+def test_schnet_smoke_molecule_step():
+    cfg = reg.get_smoke_config("schnet")
+    params, _ = S.init_schnet(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    g, na, ne = 4, 10, 24
+    batch = S.GraphBatch(
+        node_z=jnp.asarray(rng.integers(1, 20, g * na), jnp.int32),
+        senders=jnp.asarray(
+            (rng.integers(0, na, (g, ne)) + np.arange(g)[:, None] * na
+             ).reshape(-1), jnp.int32),
+        receivers=jnp.asarray(
+            (rng.integers(0, na, (g, ne)) + np.arange(g)[:, None] * na
+             ).reshape(-1), jnp.int32),
+        distances=jnp.asarray(rng.uniform(0.5, 5, g * ne), jnp.float32),
+        graph_ids=jnp.repeat(jnp.arange(g), na),
+        targets=jnp.asarray(rng.normal(size=(g,)), jnp.float32),
+    )
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: S.schnet_loss(p, batch, cfg, CTX, n_graphs=g),
+        has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert _finite_tree(grads)
+
+
+def test_schnet_smoke_node_level():
+    cfg = dataclasses.replace(reg.get_smoke_config("schnet"), d_feat_in=12)
+    params, _ = S.init_schnet(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    n, e = 40, 100
+    batch = S.GraphBatch(
+        node_feat=jnp.asarray(rng.normal(size=(n, 12)), jnp.float32),
+        senders=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        receivers=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        distances=jnp.asarray(rng.uniform(0.5, 5, e), jnp.float32),
+        edge_mask=jnp.asarray(rng.uniform(size=e) > 0.1),
+        targets=jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+    )
+    loss, _ = S.schnet_loss(params, batch, cfg, CTX)
+    assert np.isfinite(float(loss))
+
+
+def _recsys_batch(cfg, b=4, rng=None):
+    rng = rng or np.random.default_rng(0)
+    fields = {}
+    for f in cfg.fields:
+        if f.multi_hot > 1:
+            fields[f.name] = jnp.asarray(
+                rng.integers(0, f.vocab + 1, (b, f.multi_hot)), jnp.int32)
+        else:
+            fields[f.name] = jnp.asarray(rng.integers(0, f.vocab, b), jnp.int32)
+    return R.RecBatch(
+        fields=fields,
+        history=(jnp.asarray(rng.integers(0, cfg.item_vocab + 1,
+                                          (b, cfg.seq_len)), jnp.int32)
+                 if cfg.seq_len else None),
+        target_item=(jnp.asarray(rng.integers(0, cfg.item_vocab, b), jnp.int32)
+                     if cfg.item_vocab else None),
+        label=jnp.asarray(rng.integers(0, 2, b), jnp.float32),
+        candidates=jnp.asarray(rng.integers(0, cfg.item_vocab or 10, (b, 32)),
+                               jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_train_step(arch):
+    cfg = reg.get_smoke_config(arch)
+    params, _ = R.init_recsys(jax.random.PRNGKey(0), cfg)
+    batch = _recsys_batch(cfg)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: R.bce_loss(p, cfg, batch, CTX), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch
+    assert _finite_tree(grads), arch
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke_retrieval(arch):
+    cfg = reg.get_smoke_config(arch)
+    params, _ = R.init_recsys(jax.random.PRNGKey(0), cfg)
+    batch = _recsys_batch(cfg)
+    vals, ids = R.retrieval_scores(params, cfg, batch, CTX, k=10)
+    assert vals.shape == (4, 10) and ids.shape == (4, 10)
+    assert np.isfinite(np.asarray(vals)).all()
+    # returned ids come from the candidate set
+    cands = np.asarray(batch.candidates)
+    for i in range(4):
+        assert set(np.asarray(ids)[i]).issubset(set(cands[i]))
+
+
+def test_all_archs_have_param_counts():
+    for arch in reg.all_archs():
+        cfg = reg.get_config(arch)
+        assert cfg.param_count() > 0, arch
+
+
+def test_full_config_exactness():
+    """Pin the exact assigned hyperparameters (guards config drift)."""
+    q = reg.get_config("qwen2.5-3b")
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab_size, q.qkv_bias) == (36, 2048, 16, 2, 11008, 151936, True)
+    m = reg.get_config("minicpm3-4b")
+    assert (m.n_layers, m.d_model, m.n_heads, m.d_ff, m.vocab_size,
+            m.attention) == (62, 2560, 40, 6400, 73448, "mla")
+    s = reg.get_config("smollm-360m")
+    assert (s.n_layers, s.d_model, s.n_heads, s.n_kv_heads, s.d_ff,
+            s.vocab_size) == (32, 960, 15, 5, 2560, 49152)
+    p = reg.get_config("phi3.5-moe-42b-a6.6b")
+    assert (p.n_layers, p.d_model, p.n_heads, p.n_kv_heads, p.n_experts,
+            p.top_k, p.vocab_size) == (32, 4096, 32, 8, 16, 2, 32064)
+    a = reg.get_config("arctic-480b")
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.n_experts,
+            a.top_k, a.vocab_size, a.dense_residual) == (
+        35, 7168, 56, 8, 128, 2, 32000, True)
+    g = reg.get_config("schnet")
+    assert (g.n_interactions, g.d_hidden, g.n_rbf, g.cutoff) == (3, 64, 300, 10.0)
+    b = reg.get_config("bst")
+    assert (b.embed_dim, b.seq_len, b.n_blocks, b.n_heads, b.mlp) == (
+        32, 20, 1, 8, (1024, 512, 256))
+    d = reg.get_config("din")
+    assert (d.embed_dim, d.seq_len, d.attn_mlp, d.mlp) == (
+        18, 100, (80, 40), (200, 80))
+    de = reg.get_config("dien")
+    assert (de.embed_dim, de.seq_len, de.gru_dim, de.mlp) == (
+        18, 100, 108, (200, 80))
+    w = reg.get_config("wide-deep")
+    assert len(w.fields) == 40 and w.embed_dim == 32 and w.mlp == (1024, 512, 256)

@@ -1,0 +1,126 @@
+"""FlexNeuART scoring modules: BM25 exports, proximity, Model 1 EM, RM3,
+composite-extractor config parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.model1 import model1_logprob, train_model1
+from repro.core.scorers import (AvgWordEmbedExtractor, BM25Extractor,
+                                CompositeExtractor, Model1Extractor,
+                                ProximityExtractor, RM3Extractor,
+                                bm25_doc_vectors, bm25_idf,
+                                build_forward_index, query_sparse_vectors)
+from repro.core.sparse import sparse_inner_qbatch_docs
+
+
+@pytest.fixture(scope="module")
+def fwd():
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 50, size=rng.integers(5, 25)) for _ in range(64)]
+    return build_forward_index(docs, 50)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.integers(0, 50, size=(6, 4)), jnp.int32)
+
+
+class TestBM25:
+    def test_idf_monotone_in_rarity(self, fwd):
+        idf = np.asarray(bm25_idf(fwd))
+        df = np.asarray(fwd.df)
+        order = np.argsort(df)
+        # rarer term => higher (or equal) idf
+        assert np.all(np.diff(idf[order]) <= 1e-6)
+
+    def test_export_matches_extractor(self, fwd, queries):
+        """<query counts, BM25 doc vector> == extractor BM25 score — the
+        equivalence FlexNeuART's NMSLIB export rests on (paper §3.2)."""
+        dv = bm25_doc_vectors(fwd, nnz=50)
+        qv = query_sparse_vectors(queries, fwd.vocab_size, nnz=8)
+        via_ip = np.asarray(sparse_inner_qbatch_docs(qv, dv, fwd.vocab_size))
+        cand = jnp.broadcast_to(jnp.arange(fwd.n_docs), (6, fwd.n_docs))
+        via_extract = np.asarray(BM25Extractor(fwd).extract(queries, cand))[..., 0]
+        np.testing.assert_allclose(via_ip, via_extract, rtol=1e-4, atol=1e-5)
+
+    def test_more_matches_scores_higher(self, fwd):
+        doc_tokens = np.asarray(fwd.tokens)
+        d = 0
+        toks = doc_tokens[d][doc_tokens[d] < fwd.vocab_size]
+        q_hit = jnp.asarray([list(toks[:2]) + [49, 49]], jnp.int32)
+        q_miss = jnp.asarray([[49, 49, 49, 49]], jnp.int32)
+        cand = jnp.asarray([[d]], jnp.int32)
+        s_hit = float(BM25Extractor(fwd).extract(q_hit, cand)[0, 0, 0])
+        s_miss = float(BM25Extractor(fwd).extract(q_miss, cand)[0, 0, 0])
+        assert s_hit > s_miss or np.isclose(s_hit, s_miss)
+
+
+class TestProximity:
+    def test_adjacent_pair_beats_scattered(self):
+        docs = [np.asarray([1, 2, 9, 9, 9, 9, 9, 9]),
+                np.asarray([1, 9, 9, 9, 9, 9, 9, 2])]
+        fwd = build_forward_index(docs, 10)
+        q = jnp.asarray([[1, 2]], jnp.int32)
+        cand = jnp.asarray([[0, 1]], jnp.int32)
+        f = np.asarray(ProximityExtractor(fwd, window=3).extract(q, cand))
+        assert f[0, 0, 0] > f[0, 1, 0]   # ordered feature
+        assert f[0, 0, 1] > f[0, 1, 1]   # unordered feature
+
+
+class TestModel1:
+    def test_em_monotone_likelihood(self):
+        rng = np.random.default_rng(2)
+        v = 40
+        qb = jnp.asarray(rng.integers(0, v, size=(64, 4)), jnp.int32)
+        db = jnp.asarray(rng.integers(0, v, size=(64, 8)), jnp.int32)
+        _, lls = train_model1(qb, db, v, v, iters=5)
+        assert all(float(lls[i + 1]) >= float(lls[i]) - 1e-4
+                   for i in range(len(lls) - 1)), lls
+
+    def test_bridges_vocabulary_gap(self):
+        """Synonym-paired bitext: after EM, a doc containing only the
+        synonym should outscore an unrelated doc — the paper's reason to
+        include Model 1 (Berger et al.'s lexical chasm)."""
+        v = 20
+        # queries use token t, relevant docs use synonym t+10
+        q = jnp.asarray([[t, t, t, t] for t in range(10) for _ in range(8)],
+                        jnp.int32)
+        d = jnp.asarray([[t + 10] * 6 for t in range(10) for _ in range(8)],
+                        jnp.int32)
+        tt, _ = train_model1(q, d, v, v, iters=8)
+        bg = jnp.ones((v,)) / v
+        q_test = jnp.asarray([[3, 3, 3, 3]], jnp.int32)
+        doc_syn = jnp.asarray([[13, 13, 13, 13, 13, 13]], jnp.int32)
+        doc_other = jnp.asarray([[17, 17, 17, 17, 17, 17]], jnp.int32)
+        lp_syn = model1_logprob(tt, bg, q_test, doc_syn,
+                                jnp.asarray([6]), v)
+        lp_other = model1_logprob(tt, bg, q_test, doc_other,
+                                  jnp.asarray([6]), v)
+        assert float(lp_syn[0]) > float(lp_other[0])
+
+
+class TestComposite:
+    def test_fig3_style_config(self, fwd, queries):
+        emb = jax.random.normal(jax.random.PRNGKey(0), (51, 8)).at[50].set(0.0)
+        config = [
+            {"type": "TFIDFSimilarity", "params": {"k1": 1.2, "b": 0.75}},
+            {"type": "proximity", "params": {"window": 5}},
+            {"type": "avgWordEmbed",
+             "params": {"use_idf": True, "dist_type": "l2"}},
+        ]
+        comp = CompositeExtractor.from_config(config, fwd=fwd,
+                                              query_embed=emb, doc_embed=emb)
+        cand = jnp.asarray(np.random.default_rng(3).integers(
+            0, fwd.n_docs, (6, 8)), jnp.int32)
+        feats = comp.extract(queries, cand)
+        assert feats.shape == (6, 8, 4)   # 1 + 2 + 1 features
+        assert np.isfinite(np.asarray(feats)).all()
+
+    def test_rm3_finite(self, fwd, queries):
+        cand = jnp.asarray(np.random.default_rng(4).integers(
+            0, fwd.n_docs, (6, 12)), jnp.int32)
+        f = RM3Extractor(fwd, fb_docs=4, fb_terms=8).extract(queries, cand)
+        assert np.isfinite(np.asarray(f)).all()
