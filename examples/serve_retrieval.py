@@ -1,14 +1,18 @@
-"""End-to-end serving driver (the e2e deliverable): batched retrieval of a
-small corpus with the full multi-stage funnel — the paper's query-server
-deployment, TPU-idiomatic (request batching instead of Thrift threads).
+"""End-to-end async serving driver: the paper's three spaces (dense,
+sparse, fused) as live endpoints of one :class:`RetrievalService`, hit by
+a multi-client load generator.
 
-Flow: synthetic corpus -> index (inverted BM25 + fused ANN) -> train a
-LETOR fusion model -> stand up a BatchingServer around the jitted funnel
--> stream 200 single-query requests through it -> report quality + latency.
+Flow: synthetic corpus -> offline indexing (inverted BM25, dense
+projection, fused composite) -> train a LETOR fusion re-ranker -> stand
+up a RetrievalService with three endpoints + result cache -> N client
+threads stream requests (hot-query repeats exercise the cache) -> report
+per-endpoint latency percentiles, batch fill, cache hit-rate, and MRR@10
+on the sparse funnel.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
 
+import threading
 import time
 
 import jax
@@ -16,24 +20,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_retrieval import smoke_config
-from repro.core import (FusedSpace, FusedVectors, build_inverted_index,
-                        exact_topk, nn_descent, beam_search)
-from repro.core.brute_force import TopK
+from repro.core import build_inverted_index
 from repro.core.fusion import coordinate_ascent, mrr
 from repro.core.inverted_index import daat_topk
-from repro.core.pipeline import LinearReranker
+from repro.core.pipeline import (BruteForceGenerator, LinearReranker,
+                                 RetrievalPipeline)
 from repro.core.scorers import (CompositeExtractor, bm25_doc_vectors,
                                 build_forward_index, query_sparse_vectors)
-from repro.core.sparse import SparseVectors
+from repro.core.sparse import SparseVectors, densify
+from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors
 from repro.data.pipeline import pad_tokens
 from repro.data.synthetic import make_corpus, qrels_to_labels
-from repro.launch.serve import BatchingServer
+from repro.serving import RetrievalService
+
+N_CLIENTS = 4
+HOT_FRACTION = 0.3      # share of requests drawn from a small hot set
+REQUESTS_PER_CLIENT = 80
 
 
-def main():
-    rc = smoke_config()
-    corpus = make_corpus(n_docs=rc.n_docs, n_queries=200,
-                         vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
+def build_service(rc, corpus):
     v = rc.vocab_lemmas
 
     # ---- offline indexing --------------------------------------------------
@@ -42,6 +47,13 @@ def main():
     inv = build_inverted_index(doc_bm25, v)
     q_tokens_all = jnp.asarray(pad_tokens(corpus.q_lemmas, 8, v))
     q_sparse_all = query_sparse_vectors(q_tokens_all, v, rc.query_nnz)
+
+    # dense view: random projection of the BM25 vectors (stands in for a
+    # trained encoder; see examples/train_encoder.py for the real one)
+    proj = jax.random.normal(jax.random.PRNGKey(42), (v, rc.embed_dim))
+    proj = proj / jnp.sqrt(float(v))
+    doc_dense = densify(doc_bm25, v) @ proj
+    q_dense_all = densify(q_sparse_all, v) @ proj
 
     # ---- train the fusion re-ranker on held-out queries --------------------
     train_n = 64
@@ -55,39 +67,124 @@ def main():
     labels = jnp.asarray(qrels_to_labels(corpus, np.asarray(cands.indices)))
     w, train_m = coordinate_ascent(feats, labels, jnp.isfinite(cands.scores),
                                    metric="mrr", n_rounds=3, n_restarts=2)
-    print(f"fusion model trained: MRR {train_m:.3f}, weights {np.round(np.asarray(w),3)}")
+    print(f"fusion model trained: MRR {train_m:.3f}, "
+          f"weights {np.round(np.asarray(w), 3)}")
     reranker = LinearReranker(comp, w)
 
-    # ---- the jitted serving step -------------------------------------------
-    @jax.jit
-    def funnel(batch):
-        q_sp, q_tok = batch
+    # ---- the service: three spaces as endpoints ----------------------------
+    svc = RetrievalService(cache_size=2048)
+
+    def sparse_funnel(q_sp, q_tok):
         cands = daat_topk(inv, q_sp, rc.cand_qty)
         return reranker.rerank(q_tok, cands, 10)
 
-    batch_size = 16
-    pad_query = (SparseVectors(q_sparse_all.indices[0], q_sparse_all.values[0]),
-                 q_tokens_all[0])
-    server = BatchingServer(funnel, batch_size, pad_query)
+    pad_sp = SparseVectors(q_sparse_all.indices[0], q_sparse_all.values[0])
+    svc.register_runner("sparse", sparse_funnel, pad_sp, q_tokens_all[0],
+                        batch_size=16, max_wait_s=0.01, jit=True)
 
-    # ---- stream requests ----------------------------------------------------
-    test_idx = np.arange(train_n, 200)
-    requests = [(SparseVectors(q_sparse_all.indices[i], q_sparse_all.values[i]),
-                 q_tokens_all[i]) for i in test_idx]
+    dense_pipe = RetrievalPipeline(
+        BruteForceGenerator(DenseSpace("ip"), doc_dense),
+        cand_qty=rc.cand_qty, final_qty=10)
+    svc.register_pipeline("dense", dense_pipe, q_dense_all[0],
+                          batch_size=16, max_wait_s=0.01)
+
+    fused_corpus = FusedVectors(doc_dense, doc_bm25)
+    fused_pipe = RetrievalPipeline(
+        BruteForceGenerator(FusedSpace(v, w_dense=0.5, w_sparse=0.5),
+                            fused_corpus),
+        cand_qty=rc.cand_qty, final_qty=10)
+    pad_fused = FusedVectors(q_dense_all[0], pad_sp)
+    svc.register_pipeline("fused", fused_pipe, pad_fused,
+                          batch_size=16, max_wait_s=0.01)
+
+    reprs = {
+        "sparse": lambda i: (SparseVectors(q_sparse_all.indices[i],
+                                           q_sparse_all.values[i]),
+                             q_tokens_all[i]),
+        "dense": lambda i: (q_dense_all[i], None),
+        "fused": lambda i: (FusedVectors(
+            q_dense_all[i], SparseVectors(q_sparse_all.indices[i],
+                                          q_sparse_all.values[i])), None),
+    }
+    return svc, reprs, train_n
+
+
+def run_load(svc, reprs, query_pool):
+    """N client threads; each mixes cold queries with a hot repeated set."""
+    endpoints = list(reprs)
+    hot = query_pool[:8]
+    records, lock = [], threading.Lock()
+
+    def client(cid):
+        rng = np.random.default_rng(1000 + cid)
+        for _ in range(REQUESTS_PER_CLIENT):
+            qi = int(rng.choice(hot) if rng.random() < HOT_FRACTION
+                     else rng.choice(query_pool))
+            ep = endpoints[int(rng.integers(len(endpoints)))]
+            query_repr, q_tok = reprs[ep](qi)
+            fut = svc.submit(query_repr, q_tok, endpoint=ep)
+            with lock:
+                records.append((ep, qi, fut))
+            time.sleep(float(rng.uniform(0, 0.002)))   # think time
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(N_CLIENTS)]
     t0 = time.time()
-    results = server.serve(requests)
-    wall = time.time() - t0
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for _, _, fut in records:
+        fut.result()
+    return records, time.time() - t0
 
-    ids = np.stack([np.asarray(r.indices) for r in results])
-    scores = np.stack([np.asarray(r.scores) for r in results])
+
+def main():
+    rc = smoke_config()
+    corpus = make_corpus(n_docs=rc.n_docs, n_queries=200,
+                         vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
+    svc, reprs, train_n = build_service(rc, corpus)
+
+    with svc:
+        # warm-up: one request per endpoint triggers each jit compile so
+        # the reported percentiles reflect serving, not tracing; warm-up
+        # uses a train query (outside the measured pool), stats reset after
+        for ep in svc.endpoints():
+            query_repr, q_tok = reprs[ep](0)
+            svc.submit(query_repr, q_tok, endpoint=ep).result()
+        svc.reset_stats()
+
+        query_pool = np.arange(train_n, 200)
+        records, wall = run_load(svc, reprs, query_pool)
+        snap = svc.snapshot()
+
+    # ---- quality on the sparse funnel (one result per unique query) --------
+    by_q = {}
+    for ep, qi, fut in records:
+        if ep == "sparse" and qi not in by_q:
+            by_q[qi] = fut.result()
+    qis = sorted(by_q)
+    ids = np.stack([by_q[qi].indices for qi in qis])
+    scores = np.stack([by_q[qi].scores for qi in qis])
     labels = qrels_to_labels(
-        type("C", (), {"qrels": [corpus.qrels[i] for i in test_idx]})(), ids)
+        type("C", (), {"qrels": [corpus.qrels[qi] for qi in qis]})(), ids)
     m = float(mrr(jnp.asarray(scores), jnp.asarray(labels),
                   jnp.ones_like(jnp.asarray(labels), bool)))
-    print(f"served {len(requests)} requests in {wall:.2f}s "
-          f"({len(requests)/wall:.1f} qps, "
-          f"{server.stats.mean_latency_ms:.1f} ms/batch)  MRR@10 {m:.3f}")
+
+    # ---- report -------------------------------------------------------------
+    n = len(records)
+    print(f"\nserved {n} requests from {N_CLIENTS} clients in {wall:.2f}s "
+          f"({n / wall:.1f} qps)  cache hit-rate "
+          f"{snap.cache_hit_rate:.0%} ({snap.cache_hits}/{snap.cache_hits + snap.cache_misses})")
+    for name in sorted(snap.endpoints):
+        ep = snap.endpoints[name]
+        print(f"  {name:>6}: {ep.n_requests:4d} req in {ep.n_batches:3d} "
+              f"batches (fill {ep.mean_batch_fill:.0%}, "
+              f"close size/deadline {ep.closed_by_size}/{ep.closed_by_deadline})  "
+              f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
+    print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
+    assert snap.cache_hits > 0
 
 
 if __name__ == "__main__":

@@ -136,9 +136,18 @@ def analyze_terms(flops: float, bytes_accessed: float,
                     bottleneck_lo)
 
 
+def cost_dict(compiled) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across jax versions: a dict on
+    jax >= 0.5, a single-element list of dicts on 0.4.x."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze(compiled, n_chips: int, model_flops: Optional[float] = None,
             hlo_text: Optional[str] = None) -> Roofline:
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     txt = hlo_text if hlo_text is not None else compiled.as_text()

@@ -1,28 +1,22 @@
-"""Batched retrieval serving driver — the paper's query-server role.
+"""Batched retrieval serving driver — COMPAT SHIM.
 
-NMSLIB ships a multithreaded Thrift query server; the TPU-idiomatic
-equivalent is a *batching* server: requests queue up, are padded into
-fixed-size batches (jit shape stability), run through the retrieval
-pipeline, and fan back out.  The driver implements:
-
-  * fixed batch slots + zero-padding (partial batches served, masked);
-  * multi-stage funnel execution (candidate gen -> re-rankers);
-  * simple continuous batching: the wait window closes early when the
-    batch fills (latency/throughput knob, measured in the e2e example).
-
-See examples/serve_retrieval.py for the end-to-end driver on a synthetic
-corpus with all four candidate generators.
+The real serving subsystem lives in :mod:`repro.serving` (admission queue
+-> continuous batcher -> pipeline -> cache -> stats; see
+``src/repro/serving/README.md``).  This module keeps the original
+``BatchingServer`` / ``ServeStats`` surface for existing callers: a
+synchronous ``serve(queries)`` loop backed by a single-endpoint
+:class:`~repro.serving.RetrievalService` with the result cache disabled
+(the old server had none).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serving import RetrievalService
+
+__all__ = ["ServeStats", "BatchingServer"]
 
 
 @dataclasses.dataclass
@@ -42,7 +36,9 @@ class ServeStats:
 class BatchingServer:
     """Wraps a jitted ``fn(batch_queries) -> TopK`` with request batching.
 
-    ``pad_query`` produces the padding query (scored but discarded)."""
+    ``pad_query`` produces the padding query (scored but discarded).
+    ``window_s`` is the continuous-batching deadline (the batch closes
+    early when it fills)."""
 
     def __init__(self, fn: Callable, batch_size: int, pad_query,
                  window_s: float = 0.005):
@@ -51,29 +47,40 @@ class BatchingServer:
         self.pad_query = pad_query
         self.window_s = window_s
         self.stats = ServeStats()
-
-    def _assemble(self, queries: Sequence):
-        n = len(queries)
-        qs = list(queries) + [self.pad_query] * (self.batch_size - n)
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *qs), n
+        self._service = RetrievalService(cache_size=0)
+        self._service.register_runner(
+            "default", lambda batch, _tokens: fn(batch),
+            pad_query_repr=pad_query,
+            batch_size=batch_size, max_wait_s=window_s)
 
     def serve(self, queries: Sequence):
         """Serve a stream of single queries; returns per-query results."""
-        out = []
-        i = 0
-        while i < len(queries):
-            t0 = time.monotonic()
-            chunk = queries[i: i + self.batch_size]
-            batch, n = self._assemble(chunk)
-            t1 = time.monotonic()
-            res = self.fn(batch)
-            res = jax.tree.map(lambda x: np.asarray(x), res)
-            t2 = time.monotonic()
-            for j in range(n):
-                out.append(jax.tree.map(lambda x: x[j], res))
-            self.stats.n_requests += n
-            self.stats.n_batches += 1
-            self.stats.total_wait_s += t1 - t0
-            self.stats.total_exec_s += t2 - t1
-            i += n
+        futures = self._service.submit_many(queries, endpoint="default")
+        out = [f.result() for f in futures]
+        ep = self._service.snapshot().endpoints["default"]
+        self.stats.n_requests = ep.n_requests
+        self.stats.n_batches = ep.n_batches
+        # per-batch wait = mean per-request queue wait (batch assembly
+        # window); keeps mean_latency_ms ~ one request's life like before
+        if ep.n_requests:
+            self.stats.total_wait_s = (ep.queue_wait_total_s / ep.n_requests
+                                       * ep.n_batches)
+        self.stats.total_exec_s = ep.execute_total_s
         return out
+
+    def close(self):
+        self._service.close()
+
+    # the pre-async BatchingServer needed no lifecycle management; keep
+    # that contract for old callers by reaping the worker thread on GC
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # noqa: BLE001 — interpreter teardown
+            pass
+
+    def __enter__(self) -> "BatchingServer":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

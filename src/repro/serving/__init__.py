@@ -1,0 +1,22 @@
+"""Async retrieval serving: admission queue -> continuous batcher ->
+pipeline -> cache -> stats.  See README.md in this package."""
+
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.cache import QueryCache, quantized_key
+from repro.serving.router import Router
+from repro.serving.service import RetrievalService
+from repro.serving.stats import (EndpointSnapshot, LatencySummary,
+                                 ServiceSnapshot, ServingStats)
+
+__all__ = [
+    "ContinuousBatcher",
+    "Request",
+    "QueryCache",
+    "quantized_key",
+    "Router",
+    "RetrievalService",
+    "ServingStats",
+    "ServiceSnapshot",
+    "EndpointSnapshot",
+    "LatencySummary",
+]

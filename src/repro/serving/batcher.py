@@ -1,0 +1,188 @@
+"""Admission queue + continuous batcher.
+
+One :class:`ContinuousBatcher` per endpoint owns an admission queue and a
+worker thread.  The worker closes a batch on whichever knob trips first:
+
+  * **size** — ``batch_size`` requests are waiting (throughput knob);
+  * **deadline** — ``max_wait_s`` elapsed since the batch opened
+    (latency knob);
+  * **drain** — the service is shutting down and flushes what's queued.
+
+Partial batches are padded to the fixed ``batch_size`` with the
+endpoint's pad query (jit shape stability — the padded rows are scored
+and discarded), run through the endpoint's batched runner, and the rows
+fan back out to per-request futures.  A runner failure fails every
+future in the batch; the worker survives and keeps serving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.stats import ServingStats
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+_POLL_S = 0.02   # stop-flag poll while the queue is idle
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight query: representation + (optional) raw tokens for the
+    re-ranking stages, the future the result lands in, and timestamps."""
+
+    query_repr: Any
+    q_tokens: Optional[Any]
+    endpoint: str
+    future: Future
+    t_admit: float
+    cache_key: Optional[bytes] = None
+
+
+class ContinuousBatcher:
+    def __init__(
+        self,
+        name: str,
+        run_fn: Callable[[Any, Optional[Any]], Any],
+        pad_query_repr: Any,
+        pad_q_tokens: Optional[Any] = None,
+        *,
+        batch_size: int = 16,
+        max_wait_s: float = 0.01,
+        stats: Optional[ServingStats] = None,
+        on_result: Optional[Callable[[Request, Any], None]] = None,
+        time_fn: Callable[[], float] = time.monotonic,
+    ):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.name = name
+        self.run_fn = run_fn
+        self.pad_query_repr = pad_query_repr
+        self.pad_q_tokens = pad_q_tokens
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.stats = stats if stats is not None else ServingStats()
+        self.on_result = on_result
+        self._time_fn = time_fn
+        self._queue: "queue_mod.Queue[Request]" = queue_mod.Queue()
+        self._stop = threading.Event()
+        # couples the stop check to the enqueue: without it a submit racing
+        # close() could enqueue after the drain pass and hang its future
+        self._submit_lock = threading.Lock()
+        self._thread = threading.Thread(
+            target=self._loop, name=f"batcher-{name}", daemon=True)
+        self.stats.register_endpoint(name, self._queue.qsize)
+        self._thread.start()
+
+    # -- client side --------------------------------------------------------
+    def submit(self, request: Request):
+        if self.pad_q_tokens is None and request.q_tokens is not None:
+            raise ValueError(
+                f"endpoint {self.name!r} was registered without "
+                "pad_q_tokens, so per-request q_tokens would be silently "
+                "dropped; register the endpoint with a pad_q_tokens value")
+        with self._submit_lock:
+            if self._stop.is_set():
+                raise RuntimeError(f"batcher {self.name!r} is closed")
+            self._queue.put(request)
+
+    def queue_depth(self) -> int:
+        return self._queue.qsize()
+
+    # -- worker side --------------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            batch, closed_by = self._gather()
+            if batch:
+                self._safe_execute(batch, closed_by)
+        # drain: everything still queued is flushed in fixed-size batches
+        leftover: List[Request] = []
+        while True:
+            try:
+                leftover.append(self._queue.get_nowait())
+            except queue_mod.Empty:
+                break
+        for i in range(0, len(leftover), self.batch_size):
+            self._safe_execute(leftover[i:i + self.batch_size], "drain")
+
+    def _safe_execute(self, batch: List[Request], closed_by: str):
+        """The worker must survive anything a batch throws at it."""
+        try:
+            self._execute(batch, closed_by)
+        except Exception as exc:            # noqa: BLE001
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+
+    def _gather(self):
+        """Block for the first request, then fill until size or deadline."""
+        try:
+            first = self._queue.get(timeout=_POLL_S)
+        except queue_mod.Empty:
+            return [], None
+        batch = [first]
+        deadline = self._time_fn() + self.max_wait_s
+        while len(batch) < self.batch_size:
+            if self._stop.is_set():
+                return batch, "drain"
+            remaining = deadline - self._time_fn()
+            if remaining <= 0:
+                return batch, "deadline"
+            try:
+                batch.append(
+                    self._queue.get(timeout=min(remaining, _POLL_S)))
+            except queue_mod.Empty:
+                continue   # re-check stop flag and deadline
+        return batch, "size"
+
+    def _assemble(self, batch: List[Request]):
+        n_pad = self.batch_size - len(batch)
+        reprs = [r.query_repr for r in batch] + [self.pad_query_repr] * n_pad
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reprs)
+        if self.pad_q_tokens is None:
+            return stacked, None
+        toks = [r.q_tokens for r in batch] + [self.pad_q_tokens] * n_pad
+        return stacked, jax.tree.map(lambda *xs: jnp.stack(xs), *toks)
+
+    def _execute(self, batch: List[Request], closed_by: str):
+        t0 = self._time_fn()
+        try:
+            stacked, tokens = self._assemble(batch)
+            out = self.run_fn(stacked, tokens)
+            out = jax.tree.map(
+                lambda x: np.asarray(jax.block_until_ready(x)), out)
+        except Exception as exc:            # noqa: BLE001 — fan out to futures
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+            return
+        t1 = self._time_fn()
+        self.stats.record_batch(
+            self.name, served=len(batch), capacity=self.batch_size,
+            closed_by=closed_by,
+            queue_waits_s=[t0 - r.t_admit for r in batch],
+            exec_s=t1 - t0)
+        for i, r in enumerate(batch):
+            result = jax.tree.map(lambda x: x[i], out)
+            if self.on_result is not None:
+                self.on_result(r, result)
+            self.stats.record_e2e(self.name, self._time_fn() - r.t_admit)
+            # a client may have cancelled the future while it was queued;
+            # claiming it as running makes set_result race-free
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_result(result)
+
+    def close(self):
+        """Stop accepting, flush the queue, join the worker."""
+        with self._submit_lock:
+            self._stop.set()
+        self._thread.join()

@@ -1,0 +1,85 @@
+"""Query-result LRU cache keyed on a quantized query representation.
+
+A hit skips the whole funnel: the stored per-query result (numpy pytree,
+exactly as a batcher produced it) is returned immediately, so cached
+answers are bit-identical to freshly-served ones by construction.
+
+Keys quantize the query representation (round to ``decimals``) before
+hashing so that float jitter below the quantization step — e.g. the same
+query re-encoded on a different host — still hits.  The endpoint name is
+part of the key: the same vector against the dense and the fused space is
+two different questions.
+"""
+
+from __future__ import annotations
+
+import collections
+import hashlib
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["quantized_key", "QueryCache"]
+
+
+def quantized_key(endpoint: str, query: Any, decimals: int = 6) -> bytes:
+    """Stable digest of (endpoint, quantized query pytree).
+
+    Float leaves are rounded to ``decimals``; integer leaves (token ids,
+    sparse indices) are hashed exactly.  Leaf shapes and dtypes are folded
+    in so e.g. f32[8] and f32[2,4] with equal bytes cannot collide."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(endpoint.encode())
+    for leaf in jax.tree.leaves(query):
+        a = np.asarray(leaf)
+        if np.issubdtype(a.dtype, np.floating):
+            # + 0.0 normalises -0.0 to +0.0 (their bytes differ); jitter
+            # crossing a rounding boundary still misses — inherent to
+            # quantization, a perf loss only, never a wrong result
+            a = np.round(a.astype(np.float64), decimals) + 0.0
+        h.update(str(a.dtype).encode())
+        h.update(np.asarray(a.shape, np.int64).tobytes())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.digest()
+
+
+class QueryCache:
+    """Thread-safe LRU over quantized-query keys."""
+
+    def __init__(self, capacity: int = 4096, decimals: int = 6):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self.decimals = decimals
+        self._lock = threading.Lock()
+        self._data: "collections.OrderedDict[bytes, Any]" = collections.OrderedDict()
+
+    def key(self, endpoint: str, query: Any) -> bytes:
+        return quantized_key(endpoint, query, self.decimals)
+
+    def get(self, key: bytes) -> Optional[Any]:
+        with self._lock:
+            if key not in self._data:
+                return None
+            self._data.move_to_end(key)
+            return self._data[key]
+
+    def put(self, key: bytes, value: Any):
+        # freeze array leaves: hits hand out the stored pytree by
+        # reference, so an in-place mutation by one client would silently
+        # corrupt every later hit (and the first requester shares these
+        # arrays too) — read-only makes that a loud ValueError instead
+        for leaf in jax.tree.leaves(value):
+            if isinstance(leaf, np.ndarray):
+                leaf.setflags(write=False)
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)

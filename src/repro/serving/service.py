@@ -1,0 +1,144 @@
+"""RetrievalService — the async serving facade.
+
+Wires the pieces together::
+
+    submit() --cache hit--> future (already resolved)
+        \\--miss--> Router --> per-endpoint ContinuousBatcher
+                                   |  size/deadline close, pad, stack
+                                   v
+                          batched runner (RetrievalPipeline.run / jit fn)
+                                   |  slice rows, fill cache, record stats
+                                   v
+                            per-request Future
+
+Endpoints register either a :class:`~repro.core.pipeline.RetrievalPipeline`
+(optionally jitted) or any batched runner ``fn(query_repr, q_tokens) ->
+pytree``.  Results delivered through futures are numpy pytrees (one row of
+the batched output), bit-identical to an offline ``pipeline.run`` on the
+same queries — verified in ``tests/test_serving.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Iterable, List, Optional
+
+import jax
+
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.cache import QueryCache
+from repro.serving.router import Router
+from repro.serving.stats import ServiceSnapshot, ServingStats
+
+__all__ = ["RetrievalService"]
+
+
+class RetrievalService:
+    """Multi-endpoint async retrieval with continuous batching + caching.
+
+    ``cache_size=0`` disables the result cache entirely (every request
+    goes through the funnel) — the bench's cache-off baseline."""
+
+    def __init__(self, *, cache_size: int = 4096, cache_decimals: int = 6,
+                 time_fn: Callable[[], float] = time.monotonic):
+        self._time_fn = time_fn
+        self.stats = ServingStats(time_fn=time_fn)
+        self.cache = (QueryCache(cache_size, cache_decimals)
+                      if cache_size > 0 else None)
+        self.router = Router()
+        self._closed = False
+
+    # -- endpoint registration ----------------------------------------------
+    def register_runner(
+        self, name: str, run_fn: Callable[[Any, Optional[Any]], Any],
+        pad_query_repr: Any, pad_q_tokens: Optional[Any] = None, *,
+        batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
+    ) -> "RetrievalService":
+        if jit:
+            run_fn = jax.jit(run_fn)
+        batcher = ContinuousBatcher(
+            name, run_fn, pad_query_repr, pad_q_tokens,
+            batch_size=batch_size, max_wait_s=max_wait_s,
+            stats=self.stats, on_result=self._on_result,
+            time_fn=self._time_fn)
+        self.router.register(batcher)
+        return self
+
+    def register_pipeline(
+        self, name: str, pipeline, pad_query_repr: Any,
+        pad_q_tokens: Optional[Any] = None, *,
+        batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
+    ) -> "RetrievalService":
+        """Serve a :class:`RetrievalPipeline` as endpoint ``name``."""
+        def run_fn(query_repr, q_tokens):
+            return pipeline.run(query_repr, q_tokens)
+        return self.register_runner(
+            name, run_fn, pad_query_repr, pad_q_tokens,
+            batch_size=batch_size, max_wait_s=max_wait_s, jit=jit)
+
+    def endpoints(self):
+        return self.router.endpoints()
+
+    # -- request path --------------------------------------------------------
+    def submit(self, query_repr: Any, q_tokens: Optional[Any] = None,
+               endpoint: Optional[str] = None) -> Future:
+        """Admit one query; returns a Future of its per-query result."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        batcher = self.router.resolve(endpoint)
+        t_admit = self._time_fn()
+        self.stats.record_request(batcher.name)
+        key = None
+        if self.cache is not None:
+            key = self.cache.key(batcher.name, (query_repr, q_tokens))
+            hit = self.cache.get(key)
+            self.stats.record_cache(hit is not None)
+            if hit is not None:
+                fut: Future = Future()
+                self.stats.record_e2e(batcher.name,
+                                      self._time_fn() - t_admit)
+                fut.set_result(hit)
+                return fut
+        fut = Future()
+        self.router.dispatch(Request(
+            query_repr=query_repr, q_tokens=q_tokens, endpoint=batcher.name,
+            future=fut, t_admit=t_admit, cache_key=key))
+        return fut
+
+    def submit_many(self, queries: Iterable[Any],
+                    q_tokens: Optional[Iterable[Any]] = None,
+                    endpoint: Optional[str] = None) -> List[Future]:
+        qs = list(queries)
+        ts = list(q_tokens) if q_tokens is not None else [None] * len(qs)
+        return [self.submit(q, t, endpoint) for q, t in zip(qs, ts)]
+
+    def retrieve(self, queries: Iterable[Any],
+                 q_tokens: Optional[Iterable[Any]] = None,
+                 endpoint: Optional[str] = None) -> List[Any]:
+        """Blocking convenience: submit everything, wait, return results."""
+        return [f.result() for f in
+                self.submit_many(queries, q_tokens, endpoint)]
+
+    def _on_result(self, request: Request, result: Any):
+        if self.cache is not None and request.cache_key is not None:
+            self.cache.put(request.cache_key, result)
+
+    # -- lifecycle / observability -------------------------------------------
+    def snapshot(self) -> ServiceSnapshot:
+        return self.stats.snapshot()
+
+    def reset_stats(self):
+        """Zero counters after warm-up so snapshots cover only real load."""
+        self.stats.reset()
+
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            self.router.close()
+
+    def __enter__(self) -> "RetrievalService":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,194 @@
+"""Per-stage serving instrumentation.
+
+Every stage of the serving funnel (admission queue wait, batch execution,
+end-to-end request latency) records into a bounded reservoir; a
+:meth:`ServingStats.snapshot` call freezes everything into plain
+dataclasses with p50/p99/mean, batch-occupancy and close-reason counters,
+cache hit-rate, and live queue depth — the numbers the latency/throughput
+frontier bench (``benchmarks/serve_bench.py``) and the load-generator
+example report.
+
+All recorders are thread-safe: requests are admitted from client threads
+while batcher worker threads record execution.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+__all__ = ["LatencySummary", "EndpointSnapshot", "ServiceSnapshot",
+           "ServingStats"]
+
+_RESERVOIR = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencySummary:
+    """Percentiles over the (bounded) most recent samples of one stage."""
+
+    count: int = 0
+    mean_ms: float = 0.0
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+
+    @staticmethod
+    def from_samples(samples_s) -> "LatencySummary":
+        if not samples_s:
+            return LatencySummary()
+        ms = 1e3 * np.asarray(samples_s, dtype=np.float64)
+        return LatencySummary(
+            count=int(ms.size),
+            mean_ms=float(ms.mean()),
+            p50_ms=float(np.percentile(ms, 50)),
+            p99_ms=float(np.percentile(ms, 99)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointSnapshot:
+    name: str
+    n_requests: int
+    n_batches: int
+    mean_batch_fill: float          # served slots / capacity, in [0, 1]
+    closed_by_size: int
+    closed_by_deadline: int
+    closed_by_drain: int
+    queue_depth: int                # live depth at snapshot time
+    queue_wait: LatencySummary      # admission -> batch close
+    execute: LatencySummary         # batch assembly + pipeline run
+    e2e: LatencySummary             # admission -> result available
+    # exact lifetime sums (the percentile reservoirs are bounded)
+    queue_wait_total_s: float = 0.0
+    execute_total_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSnapshot:
+    endpoints: Dict[str, EndpointSnapshot]
+    n_requests: int
+    cache_hits: int
+    cache_misses: int
+    uptime_s: float
+
+    @property
+    def cache_hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.n_requests / self.uptime_s if self.uptime_s > 0 else 0.0
+
+
+class _EndpointStats:
+    def __init__(self, name: str):
+        self.name = name
+        self.n_requests = 0
+        self.n_batches = 0
+        self.fill_sum = 0.0
+        self.closed_by = collections.Counter()
+        self.queue_wait = collections.deque(maxlen=_RESERVOIR)
+        self.execute = collections.deque(maxlen=_RESERVOIR)
+        self.e2e = collections.deque(maxlen=_RESERVOIR)
+        self.queue_wait_total_s = 0.0
+        self.execute_total_s = 0.0
+
+
+class ServingStats:
+    """Thread-safe recorder; ``snapshot()`` is the only read path."""
+
+    def __init__(self, time_fn: Callable[[], float] = time.monotonic):
+        self._lock = threading.Lock()
+        self._time_fn = time_fn
+        self._t0 = time_fn()
+        self._endpoints: Dict[str, _EndpointStats] = {}
+        self._depth_fns: Dict[str, Callable[[], int]] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- wiring -------------------------------------------------------------
+    def register_endpoint(self, name: str,
+                          depth_fn: Optional[Callable[[], int]] = None):
+        with self._lock:
+            self._endpoints.setdefault(name, _EndpointStats(name))
+            if depth_fn is not None:
+                self._depth_fns[name] = depth_fn
+
+    def _ep(self, name: str) -> _EndpointStats:
+        return self._endpoints.setdefault(name, _EndpointStats(name))
+
+    def reset(self):
+        """Zero all counters/reservoirs (e.g. after a warm-up phase) while
+        keeping endpoint registrations and depth probes."""
+        with self._lock:
+            for name in self._endpoints:
+                self._endpoints[name] = _EndpointStats(name)
+            self.cache_hits = 0
+            self.cache_misses = 0
+            self._t0 = self._time_fn()
+
+    # -- recorders ----------------------------------------------------------
+    def record_request(self, endpoint: str):
+        with self._lock:
+            self._ep(endpoint).n_requests += 1
+
+    def record_cache(self, hit: bool):
+        with self._lock:
+            if hit:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
+
+    def record_batch(self, endpoint: str, *, served: int, capacity: int,
+                     closed_by: str, queue_waits_s, exec_s: float):
+        with self._lock:
+            ep = self._ep(endpoint)
+            ep.n_batches += 1
+            ep.fill_sum += served / capacity
+            ep.closed_by[closed_by] += 1
+            ep.queue_wait.extend(queue_waits_s)
+            ep.execute.append(exec_s)
+            ep.queue_wait_total_s += sum(queue_waits_s)
+            ep.execute_total_s += exec_s
+
+    def record_e2e(self, endpoint: str, seconds: float):
+        with self._lock:
+            self._ep(endpoint).e2e.append(seconds)
+
+    # -- read path ----------------------------------------------------------
+    def snapshot(self) -> ServiceSnapshot:
+        with self._lock:
+            endpoints = {}
+            total = 0
+            for name, ep in self._endpoints.items():
+                depth = self._depth_fns.get(name, lambda: 0)()
+                endpoints[name] = EndpointSnapshot(
+                    name=name,
+                    n_requests=ep.n_requests,
+                    n_batches=ep.n_batches,
+                    mean_batch_fill=(ep.fill_sum / ep.n_batches
+                                     if ep.n_batches else 0.0),
+                    closed_by_size=ep.closed_by["size"],
+                    closed_by_deadline=ep.closed_by["deadline"],
+                    closed_by_drain=ep.closed_by["drain"],
+                    queue_depth=depth,
+                    queue_wait=LatencySummary.from_samples(ep.queue_wait),
+                    execute=LatencySummary.from_samples(ep.execute),
+                    e2e=LatencySummary.from_samples(ep.e2e),
+                    queue_wait_total_s=ep.queue_wait_total_s,
+                    execute_total_s=ep.execute_total_s,
+                )
+                total += ep.n_requests
+            return ServiceSnapshot(
+                endpoints=endpoints,
+                n_requests=total,
+                cache_hits=self.cache_hits,
+                cache_misses=self.cache_misses,
+                uptime_s=self._time_fn() - self._t0,
+            )

@@ -1,0 +1,93 @@
+"""Seeded-parametrize fallback for ``hypothesis`` on bare installs.
+
+The property tests in this suite use a tiny slice of the hypothesis API:
+``@settings(...)`` above ``@given(...)`` with ``st.integers(lo, hi)`` and
+``st.floats(lo, hi)`` strategies (no combinators — ``|``, ``.map`` etc.
+are unsupported here).  When hypothesis is not installed, this module
+provides drop-in replacements
+that expand each ``@given`` into a deterministic, seeded
+``pytest.mark.parametrize`` over ``FALLBACK_EXAMPLES`` sampled cases —
+fewer examples than hypothesis would try and no shrinking, but the same
+properties exercised on every install.
+
+Usage (in a test module):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # bare install: seeded parametrized cases
+        from _proptest import given, settings, st
+"""
+
+from __future__ import annotations
+
+import inspect
+import zlib
+
+import numpy as np
+import pytest
+
+FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    def sample(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _St:
+    """The ``strategies`` namespace subset the suite uses."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+
+st = _St()
+
+
+def settings(**_kwargs):
+    """No-op stand-in: example count is fixed at FALLBACK_EXAMPLES."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Expand into a seeded parametrize over the decorated test's args.
+
+    The seed derives from the test name, so cases are stable across runs
+    and differ between tests."""
+    def deco(fn):
+        argnames = [p for p in inspect.signature(fn).parameters
+                    if p != "self"]
+        if len(argnames) != len(strategies):
+            raise TypeError(
+                f"{fn.__name__}: {len(strategies)} strategies for "
+                f"{len(argnames)} argument(s) {argnames}")
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(s.sample(rng) for s in strategies)
+                 for _ in range(FALLBACK_EXAMPLES)]
+        if len(argnames) == 1:
+            cases = [c[0] for c in cases]
+        return pytest.mark.parametrize(",".join(argnames), cases)(fn)
+    return deco

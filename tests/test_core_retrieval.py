@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare install: seeded parametrized fallback
+    from _proptest import given, settings, st
 
 from repro.core import (DenseSpace, FusedSpace, FusedVectors, SparseSpace,
                         beam_search, build_inverted_index, build_napp,
@@ -134,6 +137,7 @@ class TestInvertedIndex:
         np.testing.assert_allclose(np.asarray(tk.scores), want, rtol=1e-5)
 
 
+@pytest.mark.slow   # nn-descent / NAPP index builds
 class TestANN:
     def test_graph_ann_recall(self, dense_data):
         q, c = dense_data

@@ -3,6 +3,7 @@ re-mesh, straggler policy.  Multi-device cases run in subprocesses (device
 count must be set before jax initialises)."""
 
 import numpy as np
+import pytest
 
 from repro.distributed.straggler import StragglerMonitor
 
@@ -35,6 +36,7 @@ class TestStragglerMonitor:
             assert mon.step_end(step, durs) == []   # never 3 consecutive
 
 
+@pytest.mark.slow
 def test_sharded_mips_matches_local(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
@@ -53,6 +55,7 @@ print("SHARDED MIPS OK")
 """)
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_oracle(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses
@@ -85,6 +88,7 @@ print("MOE EP ORACLE OK")
 """, timeout=900)
 
 
+@pytest.mark.slow
 def test_elastic_remesh_roundtrip(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
@@ -111,6 +115,7 @@ print("ELASTIC OK")
 """)
 
 
+@pytest.mark.slow
 def test_checkpoint_restore_across_topologies(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np, tempfile
@@ -134,6 +139,7 @@ print("TOPOLOGY-INDEPENDENT CKPT OK")
 """)
 
 
+@pytest.mark.slow
 def test_hierarchical_compressed_psum(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np

@@ -6,6 +6,7 @@ experiments/dryrun/.)"""
 import pytest
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("qwen2.5-3b", "decode_32k"),
     ("schnet", "molecule"),
@@ -22,7 +23,7 @@ cell = build_cell("{arch}", "{shape}", mesh)
 with mesh:
     compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                        donate_argnums=cell.donate).lower(*cell.args).compile()
-cost = compiled.cost_analysis()
+cost = RL.cost_dict(compiled)
 assert float(cost.get("flops", 0)) > 0
 coll = RL.collective_bytes_from_hlo(compiled.as_text())
 roof = RL.analyze_terms(float(cost["flops"]),
@@ -58,6 +59,7 @@ def test_collective_parser():
     assert _shape_bytes("pred[3,5]") == 15
 
 
+@pytest.mark.slow
 def test_production_mesh_shapes(subproc):
     subproc("""
 from repro.launch.mesh import make_production_mesh

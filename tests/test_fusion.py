@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare install: seeded parametrized fallback
+    from _proptest import given, settings, st
 
 from repro.core.fusion import (coordinate_ascent, export_composite,
                                lambdamart, mrr, ndcg_at_k)
@@ -57,6 +60,7 @@ class TestMetrics:
 
 
 class TestCoordinateAscent:
+    @pytest.mark.slow
     def test_finds_signal_feature(self):
         feats, labels, valid = _rand_problem(0, signal=3.0)
         w, m = coordinate_ascent(feats, labels, valid, metric="ndcg",
@@ -80,6 +84,7 @@ class TestCoordinateAscent:
         assert m >= base - 1e-6
 
 
+@pytest.mark.slow   # boosted-ensemble fits
 class TestLambdaMART:
     def test_fits_nonlinear_signal(self):
         rng = np.random.default_rng(2)

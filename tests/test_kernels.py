@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare install: seeded parametrized fallback
+    from _proptest import given, settings, st
 
 from repro.core.sparse import from_dense, densify
 from repro.kernels import ops, ref

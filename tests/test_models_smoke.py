@@ -13,6 +13,8 @@ from repro import configs as reg
 from repro.configs.base import GNN_SHAPES
 from repro.distributed.sharding import ParallelCtx
 from repro.models import recsys as R
+
+pytestmark = pytest.mark.slow   # one compiled train step per arch
 from repro.models import schnet as S
 from repro.models import transformer as T
 from repro.optim import make_optimizer

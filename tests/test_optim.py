@@ -75,6 +75,7 @@ class TestCompression:
             np.asarray(wire["w"] + new_res["w"]),
             np.asarray(grads["w"]), rtol=1e-6)
 
+    @pytest.mark.slow
     def test_ef_closes_convergence_gap(self):
         """Top-k SGD without EF stalls; with EF it converges — the Stich
         et al. result, on a quadratic."""

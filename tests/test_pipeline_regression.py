@@ -1,0 +1,206 @@
+"""Regressions for the experiment-descriptor factory
+(`RetrievalPipeline.from_descriptor`) and the composite-vector export
+(`fusion.export_composite`) — key handling, model selection, sparse
+index offsets, and trash-id re-marking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fusion import ObliviousTreeEnsemble, export_composite
+from repro.core.pipeline import (BruteForceGenerator, LinearReranker,
+                                 RetrievalPipeline, TreeReranker)
+from repro.core.scorers import build_forward_index
+from repro.core.sparse import SparseVectors, densify, from_dense
+from repro.core.spaces import DenseSpace, FusedSpace
+
+
+# ---------------------------------------------------------------------------
+# RetrievalPipeline.from_descriptor
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def descriptor_context():
+    rng = np.random.default_rng(0)
+    n_docs, vocab = 32, 50
+    doc_rows = [rng.integers(0, vocab, size=rng.integers(5, 12))
+                for _ in range(n_docs)]
+    fwd = build_forward_index(doc_rows, vocab)
+    corpus = jax.random.normal(jax.random.PRNGKey(0), (n_docs, 8))
+    gen = BruteForceGenerator(DenseSpace("ip"), corpus)
+    tree = ObliviousTreeEnsemble(
+        feat=jnp.zeros((2, 2), jnp.int32),
+        thresh=jnp.zeros((2, 2), jnp.float32),
+        leaves=jnp.asarray(rng.normal(size=(2, 4)), jnp.float32),
+        lr=0.1)
+    return {
+        "candidate_provider": gen,
+        "mygen": gen,
+        "linear_w": [0.5, 0.3, 0.2],   # TFIDF (1 feat) + proximity (2 feats)
+        "tree_model": tree,
+        "fwd": fwd,
+    }
+
+
+EXTR_CFG = [{"type": "TFIDFSimilarity", "params": {}},
+            {"type": "proximity", "params": {"window": 4}}]
+
+
+class TestFromDescriptor:
+    def test_defaults(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor({}, descriptor_context)
+        assert p.generator is descriptor_context["candidate_provider"]
+        assert p.intermediate is None and p.final is None
+        assert (p.cand_qty, p.interm_qty, p.final_qty) == (100, 50, 10)
+
+    def test_candprov_key_honoured(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor(
+            {"candProv": "mygen"}, descriptor_context)
+        assert p.generator is descriptor_context["mygen"]
+
+    def test_qty_keys_coerced_to_int(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor(
+            {"candQty": "24", "intermQty": "12", "finalQty": "6"},
+            descriptor_context)
+        assert (p.cand_qty, p.interm_qty, p.final_qty) == (24, 12, 6)
+        assert all(isinstance(x, int)
+                   for x in (p.cand_qty, p.interm_qty, p.final_qty))
+
+    def test_array_model_selects_linear(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor(
+            {"extrType": EXTR_CFG, "model": "linear_w"}, descriptor_context)
+        assert isinstance(p.final, LinearReranker)
+        np.testing.assert_allclose(np.asarray(p.final.weights),
+                                   [0.5, 0.3, 0.2])
+        assert p.intermediate is None
+
+    def test_ensemble_model_selects_tree(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor(
+            {"extrType": EXTR_CFG, "model": "tree_model"}, descriptor_context)
+        assert isinstance(p.final, TreeReranker)
+        assert p.final.ensemble is descriptor_context["tree_model"]
+
+    def test_interm_keys_build_intermediate_stage(self, descriptor_context):
+        p = RetrievalPipeline.from_descriptor(
+            {"extrTypeInterm": EXTR_CFG, "modelInterm": "linear_w"},
+            descriptor_context)
+        assert isinstance(p.intermediate, LinearReranker)
+        assert p.final is None
+
+    def test_descriptor_run_matches_manual_build(self, descriptor_context):
+        """The factory builds the same funnel one would wire by hand."""
+        desc = {"candProv": "mygen", "extrType": EXTR_CFG,
+                "model": "linear_w", "candQty": 16, "finalQty": 5}
+        p = RetrievalPipeline.from_descriptor(desc, descriptor_context)
+        manual = RetrievalPipeline(
+            generator=descriptor_context["mygen"],
+            final=LinearReranker(p.final.extractor,
+                                 jnp.asarray([0.5, 0.3, 0.2])),
+            cand_qty=16, final_qty=5)
+        q = jax.random.normal(jax.random.PRNGKey(1), (3, 8))
+        q_tok = jnp.zeros((3, 4), jnp.int32)
+        a, b = p.run(q, q_tok), manual.run(q, q_tok)
+        assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+        assert np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# ---------------------------------------------------------------------------
+# fusion.export_composite
+# ---------------------------------------------------------------------------
+
+def _sparse(rng, rows, vocab, nnz, density=0.4):
+    dense = rng.uniform(size=(rows, vocab)) * \
+        (rng.uniform(size=(rows, vocab)) > 1 - density)
+    return from_dense(jnp.asarray(dense, jnp.float32), nnz), dense
+
+
+class TestExportComposite:
+    def test_second_component_indices_offset(self):
+        rng = np.random.default_rng(1)
+        (s1, _), (s2, _) = _sparse(rng, 3, 10, 4), _sparse(rng, 3, 20, 6)
+        fq, _, vocab = export_composite(
+            [("sparse", 1.0, s1, s1), ("sparse", 1.0, s2, s2)],
+            vocab_sizes=[10, 20])
+        assert vocab == 30
+        idx = np.asarray(fq.sparse.indices)
+        val = np.asarray(fq.sparse.values)
+        live = val != 0.0
+        # component boundaries: comp-1 in [0, 10), comp-2 in [10, 30)
+        assert np.all(idx[:, :4][live[:, :4]] < 10)
+        second = idx[:, 4:][live[:, 4:]]
+        assert np.all((second >= 10) & (second < 30))
+
+    def test_padding_remarked_into_combined_trash_id(self):
+        """Input pads carry per-component trash ids (== component vocab);
+        the export must re-mark every dead slot to the COMBINED vocab, or
+        a pad in component 2 would alias a real term of component 1."""
+        rng = np.random.default_rng(2)
+        # nnz 8 over 10% density -> plenty of padded slots in both comps
+        (s1, _), (s2, _) = (_sparse(rng, 4, 12, 8, density=0.1),
+                            _sparse(rng, 4, 15, 8, density=0.1))
+        assert np.any(np.asarray(s1.values) == 0.0)
+        fq, fd, vocab = export_composite(
+            [("sparse", 0.7, s1, s1), ("sparse", 0.3, s2, s2)],
+            vocab_sizes=[12, 15])
+        assert vocab == 27
+        for side in (fq, fd):
+            idx = np.asarray(side.sparse.indices)
+            val = np.asarray(side.sparse.values)
+            assert np.all(idx[val == 0.0] == vocab)
+            assert np.all(idx[val != 0.0] < vocab)
+
+    def test_fused_scores_equal_weighted_sum(self):
+        """<export(q), export(d)> == sum_i w_i * <q_i, d_i> across one dense
+        + two sparse components (the scenario-2 contract)."""
+        rng = np.random.default_rng(3)
+        b, n = 3, 6
+        qd = jnp.asarray(rng.normal(size=(b, 8)), jnp.float32)
+        dd = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+        (q1, _), (d1, _) = _sparse(rng, b, 10, 6), _sparse(rng, n, 10, 6)
+        (q2, _), (d2, _) = _sparse(rng, b, 14, 8), _sparse(rng, n, 14, 8)
+        # reference via densify: from_dense may truncate dense rows to nnz
+        q1_dense, d1_dense = (np.asarray(densify(q1, 10)),
+                              np.asarray(densify(d1, 10)))
+        q2_dense, d2_dense = (np.asarray(densify(q2, 14)),
+                              np.asarray(densify(d2, 14)))
+        fq, fd, vocab = export_composite(
+            [("dense", 0.5, qd, dd),
+             ("sparse", 0.3, q1, d1),
+             ("sparse", 0.2, q2, d2)],
+            vocab_sizes=[10, 14])
+        got = np.asarray(
+            FusedSpace(vocab, w_dense=1.0, w_sparse=1.0).score_batch(fq, fd))
+        want = (0.5 * np.asarray(qd) @ np.asarray(dd).T
+                + 0.3 * q1_dense @ d1_dense.T
+                + 0.2 * q2_dense @ d2_dense.T)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_weight_baked_into_query_side_only(self):
+        """Doc vectors stay unscaled (exported corpora are weight-free so
+        re-weighting only re-exports queries)."""
+        rng = np.random.default_rng(4)
+        (s1, _), (d1, _) = _sparse(rng, 2, 10, 4), _sparse(rng, 5, 10, 4)
+        fq, fd, _ = export_composite([("sparse", 2.0, s1, d1)],
+                                     vocab_sizes=[10])
+        live_q = np.asarray(s1.values) != 0.0
+        live_d = np.asarray(d1.values) != 0.0
+        np.testing.assert_allclose(np.asarray(fq.sparse.values)[live_q],
+                                   2.0 * np.asarray(s1.values)[live_q])
+        np.testing.assert_allclose(np.asarray(fd.sparse.values)[live_d],
+                                   np.asarray(d1.values)[live_d])
+
+    def test_dense_only_and_sparse_only_exports(self):
+        rng = np.random.default_rng(5)
+        qd = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+        dd = jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)
+        fq, fd, vocab = export_composite([("dense", 1.0, qd, dd)])
+        assert fq.sparse is None and fd.sparse is None and vocab == 0
+        (s1, _), (d1, _) = _sparse(rng, 2, 10, 4), _sparse(rng, 3, 10, 4)
+        fq2, fd2, vocab2 = export_composite([("sparse", 1.0, s1, d1)],
+                                            vocab_sizes=[10])
+        assert fq2.dense is None and fd2.dense is None and vocab2 == 10
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            export_composite([("mystery", 1.0, None, None)])

@@ -103,6 +103,7 @@ class TestModel1:
 
 
 class TestComposite:
+    @pytest.mark.slow
     def test_fig3_style_config(self, fwd, queries):
         emb = jax.random.normal(jax.random.PRNGKey(0), (51, 8)).at[50].set(0.0)
         config = [

@@ -1,0 +1,345 @@
+"""Serving subsystem: batching, cache, router, stats — and the contract
+that served results are bit-identical to the offline pipeline."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
+from repro.core.spaces import DenseSpace
+from repro.launch.serve import BatchingServer
+from repro.serving import QueryCache, RetrievalService, quantized_key
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    corpus = jax.random.normal(jax.random.PRNGKey(1), (256, 16))
+    queries = jax.random.normal(jax.random.PRNGKey(0), (40, 16))
+    pipe = RetrievalPipeline(BruteForceGenerator(DenseSpace("ip"), corpus),
+                             cand_qty=20, final_qty=10)
+    return pipe, queries
+
+
+def _service(pipe, queries, **kw):
+    defaults = dict(batch_size=16, max_wait_s=0.01)
+    defaults.update({k: kw.pop(k) for k in ("batch_size", "max_wait_s")
+                     if k in kw})
+    svc = RetrievalService(**kw)
+    svc.register_pipeline("dense", pipe, queries[0], **defaults)
+    return svc
+
+
+class TestBatching:
+    def test_served_bit_identical_to_offline(self, dense_setup):
+        """The acceptance contract: streaming through padded 16-batches
+        returns exactly what one offline run over all 40 queries returns."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:
+            res = svc.retrieve([q[i] for i in range(40)], endpoint="dense")
+        off = pipe.run(q)
+        assert np.array_equal(np.stack([r.scores for r in res]),
+                              np.asarray(off.scores))
+        assert np.array_equal(np.stack([r.indices for r in res]),
+                              np.asarray(off.indices))
+
+    def test_partial_batch_padding_correct(self, dense_setup):
+        """3 requests into a 16-slot batch: pad rows are scored and
+        discarded without perturbing the real rows."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0, batch_size=16,
+                      max_wait_s=0.005) as svc:
+            res = svc.retrieve([q[i] for i in range(3)], endpoint="dense")
+            snap = svc.snapshot()
+        off = pipe.run(q[:3])
+        assert np.array_equal(np.stack([r.indices for r in res]),
+                              np.asarray(off.indices))
+        assert np.array_equal(np.stack([r.scores for r in res]),
+                              np.asarray(off.scores))
+        ep = snap.endpoints["dense"]
+        assert ep.n_batches == 1 and ep.mean_batch_fill == pytest.approx(3 / 16)
+
+    def test_batch_closes_on_size(self, dense_setup):
+        """A full batch must not wait out a long deadline."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0, batch_size=4,
+                      max_wait_s=5.0) as svc:
+            t0 = time.monotonic()
+            svc.retrieve([q[i] for i in range(8)], endpoint="dense")
+            elapsed = time.monotonic() - t0
+            snap = svc.snapshot()
+        ep = snap.endpoints["dense"]
+        assert elapsed < 4.0          # did not sleep through the 5 s window
+        assert ep.closed_by_size == 2 and ep.closed_by_deadline == 0
+        assert ep.mean_batch_fill == pytest.approx(1.0)
+
+    def test_batch_closes_on_deadline(self, dense_setup):
+        """An underfull batch closes when the deadline trips."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0, batch_size=64,
+                      max_wait_s=0.05) as svc:
+            svc.retrieve([q[i] for i in range(3)], endpoint="dense")
+            snap = svc.snapshot()
+        ep = snap.endpoints["dense"]
+        assert ep.closed_by_deadline >= 1
+        assert ep.closed_by_size == 0
+        assert ep.mean_batch_fill < 1.0
+
+    def test_drain_on_close(self, dense_setup):
+        """close() flushes queued work instead of abandoning futures."""
+        pipe, q = dense_setup
+        svc = _service(pipe, q, cache_size=0, batch_size=64, max_wait_s=30.0)
+        futs = svc.submit_many([q[i] for i in range(3)], endpoint="dense")
+        t0 = time.monotonic()
+        svc.close()
+        assert time.monotonic() - t0 < 5.0    # not the 30 s window
+        off = pipe.run(q[:3])
+        for i, f in enumerate(futs):
+            r = f.result(timeout=1)
+            assert np.array_equal(r.indices, np.asarray(off.indices)[i])
+        assert svc.snapshot().endpoints["dense"].closed_by_drain >= 1
+        with pytest.raises(RuntimeError):
+            svc.submit(q[0], endpoint="dense")
+
+    def test_cancelled_future_does_not_kill_worker(self, dense_setup):
+        """A client cancelling a queued request must not crash the batch
+        fan-out (set_result on a cancelled future raises)."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0, batch_size=4,
+                      max_wait_s=0.2) as svc:
+            futs = svc.submit_many([q[i] for i in range(3)],
+                                   endpoint="dense")
+            cancelled = futs[1].cancel()
+            alive = [f.result(timeout=5) for f in (futs[0], futs[2])]
+            # worker must still serve subsequent traffic
+            again = svc.submit(q[5], endpoint="dense").result(timeout=5)
+        assert all(r is not None for r in alive) and again is not None
+        if cancelled:       # cancel only wins if it beat the batcher
+            assert futs[1].cancelled()
+
+    def test_runner_exception_fails_batch_not_worker(self):
+        calls = {"n": 0}
+
+        def flaky(batch, _tokens):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise ValueError("boom")
+            return batch * 2
+
+        svc = RetrievalService(cache_size=0)
+        svc.register_runner("flaky", flaky, jnp.zeros((4,)),
+                            batch_size=2, max_wait_s=0.01)
+        with svc:
+            bad = svc.submit(jnp.ones((4,)), endpoint="flaky")
+            with pytest.raises(ValueError, match="boom"):
+                bad.result(timeout=5)
+            ok = svc.submit(jnp.ones((4,)), endpoint="flaky")
+            np.testing.assert_allclose(ok.result(timeout=5), 2 * np.ones(4))
+
+
+class TestCache:
+    def test_hit_miss_semantics(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=64, max_wait_s=0.005) as svc:
+            a = svc.submit(q[0], endpoint="dense").result()
+            b = svc.submit(q[0], endpoint="dense").result()   # hit
+            c = svc.submit(q[1], endpoint="dense").result()   # miss
+            snap = svc.snapshot()
+        assert snap.cache_hits == 1 and snap.cache_misses == 2
+        assert np.array_equal(a.scores, b.scores)
+        assert np.array_equal(a.indices, b.indices)
+        assert not np.array_equal(a.indices, c.indices) or \
+            not np.array_equal(a.scores, c.scores)
+
+    def test_hit_skips_the_funnel(self, dense_setup):
+        """A hit never reaches the batcher: batch count stays flat."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=64, max_wait_s=0.005) as svc:
+            svc.submit(q[0], endpoint="dense").result()
+            before = svc.snapshot().endpoints["dense"].n_batches
+            svc.submit(q[0], endpoint="dense").result()
+            after = svc.snapshot().endpoints["dense"].n_batches
+        assert after == before
+
+    def test_quantized_key_absorbs_jitter(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=64, cache_decimals=4,
+                      max_wait_s=0.005) as svc:
+            svc.submit(q[0], endpoint="dense").result()
+            jittered = q[0] + 1e-7          # below the 1e-4 quantum
+            svc.submit(jittered, endpoint="dense").result()
+            snap = svc.snapshot()
+        assert snap.cache_hits == 1
+
+    def test_cached_result_immutable_against_client_mutation(self, dense_setup):
+        """Hits alias the stored arrays, so they are frozen: in-place
+        mutation raises instead of corrupting every later hit."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=64, max_wait_s=0.005) as svc:
+            first = svc.submit(q[0], endpoint="dense").result()
+            with pytest.raises(ValueError):
+                first.scores[0] = -1.0
+            hit = svc.submit(q[0], endpoint="dense").result()
+        off = pipe.run(q[:1])
+        assert np.array_equal(hit.scores, np.asarray(off.scores)[0])
+        assert np.array_equal(hit.indices, np.asarray(off.indices)[0])
+
+    def test_cache_disabled(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:
+            svc.submit(q[0], endpoint="dense").result()
+            svc.submit(q[0], endpoint="dense").result()
+            snap = svc.snapshot()
+        assert snap.cache_hits == 0 and snap.cache_misses == 0
+        ep = snap.endpoints["dense"]
+        assert ep.n_requests == 2
+
+    def test_lru_eviction(self):
+        cache = QueryCache(capacity=2)
+        k = [cache.key("e", jnp.asarray([float(i)])) for i in range(3)]
+        cache.put(k[0], "a")
+        cache.put(k[1], "b")
+        assert cache.get(k[0]) == "a"       # refresh 0 -> 1 becomes LRU
+        cache.put(k[2], "c")
+        assert cache.get(k[1]) is None and cache.get(k[0]) == "a"
+        assert len(cache) == 2
+
+    def test_key_separates_endpoints_and_shapes(self):
+        x = jnp.asarray([1.0, 2.0])
+        assert quantized_key("a", x) != quantized_key("b", x)
+        assert quantized_key("a", x) != quantized_key("a", x.reshape(2, 1))
+        assert quantized_key("a", x) == quantized_key("a", x + 1e-9)
+
+    def test_key_normalises_negative_zero(self):
+        """Jitter crossing zero (-1e-9 vs +1e-9) must still hit."""
+        a = quantized_key("e", jnp.asarray([-1e-9, 1.0]))
+        b = quantized_key("e", jnp.asarray([1e-9, 1.0]))
+        assert a == b
+
+
+class TestRouter:
+    def test_dispatch_reaches_the_right_pipeline(self):
+        svc = RetrievalService(cache_size=0)
+        svc.register_runner("double", lambda b, _t: b * 2, jnp.zeros((3,)),
+                            batch_size=4, max_wait_s=0.005)
+        svc.register_runner("negate", lambda b, _t: -b, jnp.zeros((3,)),
+                            batch_size=4, max_wait_s=0.005)
+        with svc:
+            x = jnp.asarray([1.0, 2.0, 3.0])
+            d = svc.submit(x, endpoint="double").result(timeout=5)
+            n = svc.submit(x, endpoint="negate").result(timeout=5)
+        np.testing.assert_allclose(d, [2, 4, 6])
+        np.testing.assert_allclose(n, [-1, -2, -3])
+        assert sorted(svc.endpoints()) == ["double", "negate"]
+
+    def test_unknown_endpoint_raises(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:
+            with pytest.raises(KeyError, match="unknown endpoint"):
+                svc.submit(q[0], endpoint="nope")
+
+    def test_default_endpoint_only_when_unambiguous(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:
+            assert svc.submit(q[0]).result() is not None   # sole endpoint
+        svc2 = RetrievalService(cache_size=0)
+        svc2.register_runner("a", lambda b, _t: b, jnp.zeros(()),
+                             batch_size=1, max_wait_s=0.001)
+        svc2.register_runner("b", lambda b, _t: b, jnp.zeros(()),
+                             batch_size=1, max_wait_s=0.001)
+        with svc2:
+            with pytest.raises(ValueError, match="endpoint required"):
+                svc2.submit(jnp.zeros(()))
+
+    def test_duplicate_registration_rejected(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:
+            with pytest.raises(ValueError, match="already registered"):
+                svc.register_pipeline("dense", pipe, q[0])
+
+
+class TestCompatShim:
+    def test_batching_server_matches_batched_fn(self):
+        """The legacy BatchingServer surface: full + partial batches served
+        bitwise-equal to the wrapped fn, stats populated, GC-safe close."""
+        c = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+        fn = jax.jit(lambda q: jax.lax.top_k(q @ c.T, 5))
+        srv = BatchingServer(fn, batch_size=8, pad_query=jnp.zeros((16,)),
+                             window_s=0.005)
+        qs = [jax.random.normal(jax.random.PRNGKey(i), (16,))
+              for i in range(13)]            # one full + one partial batch
+        out = srv.serve(qs)
+        want_s, want_i = fn(jnp.stack(qs[:8]))
+        for i in range(8):
+            assert np.array_equal(out[i][0], np.asarray(want_s)[i])
+            assert np.array_equal(out[i][1], np.asarray(want_i)[i])
+        assert srv.stats.n_requests == 13 and srv.stats.n_batches == 2
+        assert srv.stats.mean_latency_ms > 0
+        srv.close()
+
+
+class TestTokensAndStats:
+    def test_tokens_without_pad_rejected_loudly(self):
+        """q_tokens on an endpoint registered without pad_q_tokens would be
+        silently dropped; submit must refuse instead."""
+        svc = RetrievalService(cache_size=0)
+        svc.register_runner("plain", lambda b, _t: b, jnp.zeros((2,)),
+                            batch_size=2, max_wait_s=0.005)
+        with svc:
+            with pytest.raises(ValueError, match="pad_q_tokens"):
+                svc.submit(jnp.zeros((2,)),
+                           q_tokens=jnp.zeros((3,), jnp.int32),
+                           endpoint="plain")
+
+    def test_q_tokens_row_alignment(self):
+        """Per-request tokens ride along and land on the right row."""
+        def runner(batch, tokens):
+            return batch + tokens.sum(axis=-1, keepdims=True)
+
+        svc = RetrievalService(cache_size=0)
+        svc.register_runner("tok", runner, jnp.zeros((2,)),
+                            pad_q_tokens=jnp.zeros((3,), jnp.int32),
+                            batch_size=4, max_wait_s=0.01)
+        with svc:
+            futs = [svc.submit(jnp.zeros((2,)),
+                               q_tokens=jnp.full((3,), i, jnp.int32),
+                               endpoint="tok") for i in range(4)]
+            outs = [f.result(timeout=5) for f in futs]
+        for i, o in enumerate(outs):
+            np.testing.assert_allclose(o, np.full(2, 3 * i))
+
+    def test_snapshot_accounting(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0, batch_size=8,
+                      max_wait_s=0.005) as svc:
+            svc.retrieve([q[i] for i in range(24)], endpoint="dense")
+            snap = svc.snapshot()
+        ep = snap.endpoints["dense"]
+        assert snap.n_requests == 24 and ep.n_requests == 24
+        assert ep.n_batches >= 3                      # 24 served in 8-batches
+        assert ep.queue_wait.count == 24              # one wait per request
+        assert ep.execute.count == ep.n_batches
+        assert ep.e2e.count == 24
+        for s in (ep.queue_wait, ep.execute, ep.e2e):
+            assert 0.0 <= s.p50_ms <= s.p99_ms
+        assert ep.execute_total_s >= 1e-3 * ep.execute.p50_ms  # exact sums
+        assert ep.queue_depth == 0
+        assert snap.qps > 0
+
+    def test_reset_stats_zeroes_but_keeps_endpoints(self, dense_setup):
+        """Warm-up isolation: reset zeroes counters, then real load counts
+        from a clean slate on the still-registered endpoint."""
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=64, max_wait_s=0.005) as svc:
+            svc.submit(q[0], endpoint="dense").result()
+            svc.submit(q[0], endpoint="dense").result()   # a hit
+            svc.reset_stats()
+            snap0 = svc.snapshot()
+            assert snap0.n_requests == 0 and snap0.cache_hits == 0
+            assert snap0.endpoints["dense"].n_batches == 0
+            svc.submit(q[1], endpoint="dense").result()
+            snap1 = svc.snapshot()
+        assert snap1.n_requests == 1
+        assert snap1.endpoints["dense"].n_batches == 1

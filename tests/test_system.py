@@ -53,6 +53,7 @@ def test_bm25_retrieval_beats_random(setup):
     assert score > 0.3, score   # random would be ~10/n_docs
 
 
+@pytest.mark.slow
 def test_fusion_improves_over_bm25(setup):
     """Table 3's directional claim: LETOR fusion of BM25 + extra signals
     outperforms BM25 alone on the training metric."""

@@ -9,6 +9,8 @@ import pytest
 from repro import configs as reg
 from repro.launch.train import train_lm
 
+pytestmark = pytest.mark.slow   # multi-step compiled training runs
+
 
 @pytest.fixture(scope="module")
 def tiny_cfg():
