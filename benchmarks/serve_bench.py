@@ -1,10 +1,19 @@
-"""Serving latency/throughput frontier: batch-size x deadline x cache.
+"""Serving latency/throughput frontier: batch-size x deadline x cache,
+plus a shard-count sweep and an overload (admission-control) sweep.
 
 Stands up a fresh :class:`RetrievalService` per configuration around a
-jitted brute-force dense funnel, replays a repeated-query workload
-(hot-set skew, the cache's reason to exist), and reports qps + e2e
-p50/p99 per point — the latency/throughput frontier the continuous
-batcher's two knobs trace out, and the cache's effect on top.
+brute-force dense funnel, replays a repeated-query workload (hot-set
+skew, the cache's reason to exist), and reports qps + e2e p50/p99 per
+point — the latency/throughput frontier the continuous batcher's two
+knobs trace out, and the cache's effect on top.
+
+The shard sweep serves the same corpus as a :class:`ShardedPipeline`
+behind one endpoint for K in {1, 2, 4} and verifies every shard count
+returns bit-identical results.  The overload sweep floods a bounded
+admission queue (a deliberately slowed runner) under each policy and
+reports served/rejected/shed, the maximum observed queue depth, and p99
+under overload — the depth stays bounded instead of growing without
+limit.
 
     PYTHONPATH=src python benchmarks/serve_bench.py
 """
@@ -19,7 +28,8 @@ import numpy as np
 
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
 from repro.core.spaces import DenseSpace
-from repro.serving import RetrievalService
+from repro.serving import (RetrievalService, ServiceOverloaded,
+                           ShardedPipeline)
 
 N_DOCS = 4096
 DIM = 64
@@ -28,6 +38,9 @@ HOT_QUERIES = 16          # hot set receiving HOT_TRAFFIC of the stream
 HOT_TRAFFIC = 0.5
 BATCH_SIZES = (4, 16, 64)
 DEADLINES_S = (0.002, 0.01)
+SHARD_COUNTS = (1, 2, 4)
+OVERLOAD_POLICIES = ("reject", "shed_oldest")
+OVERLOAD_DEPTH = 32       # admission-queue bound during the flood
 
 
 def make_workload(n_requests: int, seed: int = 0) -> np.ndarray:
@@ -75,6 +88,88 @@ def run_config(pipe, queries, warmup_queries, workload, *, batch_size: int,
     }
 
 
+def run_shard_sweep(space, corpus, queries, warmup_queries, workload):
+    """Same corpus, same workload, K shards behind one endpoint."""
+    results, reference = {}, None
+    check_n = 8                              # queries compared across K
+    for n_shards in SHARD_COUNTS:
+        pipe = ShardedPipeline.from_corpus(space, corpus, n_shards,
+                                           cand_qty=100, final_qty=10)
+        svc = RetrievalService(cache_size=0)
+        svc.register_pipeline("dense", pipe, queries[0],
+                              batch_size=16, max_wait_s=0.005)
+        with svc:
+            svc.retrieve([warmup_queries[i % warmup_queries.shape[0]]
+                          for i in range(16)], endpoint="dense")
+            svc.reset_stats()
+            t0 = time.perf_counter()
+            futs = [svc.submit(queries[i], endpoint="dense")
+                    for i in workload]
+            for f in futs:
+                f.result()
+            wall = time.perf_counter() - t0
+            snap = svc.snapshot()      # before the identity check: latency
+            check = svc.retrieve([queries[i] for i in range(check_n)],
+                                 endpoint="dense")   # stays workload-only
+        pipe.close()
+        ep = snap.endpoints["dense"]
+        results[n_shards] = {"qps": len(futs) / wall,
+                             "p50_ms": ep.e2e.p50_ms, "p99_ms": ep.e2e.p99_ms}
+        if reference is None:
+            reference = check
+        else:
+            for a, b in zip(reference, check):
+                assert np.array_equal(a.scores, b.scores)
+                assert np.array_equal(a.indices, b.indices)
+    return results
+
+
+def run_overload_sweep(pipe, queries, n_requests: int):
+    """Flood a bounded queue through a deliberately slowed runner."""
+    jit_run = jax.jit(pipe.run)
+    results = {}
+    for policy in OVERLOAD_POLICIES:
+        def slow_run(q, _tokens):
+            time.sleep(0.005)               # force arrival rate > service rate
+            return jit_run(q, None)
+
+        svc = RetrievalService(cache_size=0)
+        svc.register_runner("dense", slow_run, queries[0],
+                            batch_size=16, max_wait_s=0.005,
+                            max_queue=OVERLOAD_DEPTH, overload=policy)
+        with svc:
+            svc.retrieve([queries[i % queries.shape[0]] for i in range(16)],
+                         endpoint="dense")
+            svc.reset_stats()
+            futs, n_rejected, max_depth = [], 0, 0
+            for i in range(n_requests):
+                try:
+                    futs.append(svc.submit(
+                        queries[i % queries.shape[0]], endpoint="dense"))
+                except ServiceOverloaded:
+                    n_rejected += 1
+                if i % 8 == 0:
+                    max_depth = max(
+                        max_depth,
+                        svc.snapshot().endpoints["dense"].queue_depth)
+            n_shed = 0
+            for f in futs:
+                try:
+                    f.result()
+                except ServiceOverloaded:
+                    n_shed += 1
+            snap = svc.snapshot()
+        ep = snap.endpoints["dense"]
+        assert ep.rejected == n_rejected and ep.shed == n_shed
+        assert max_depth <= OVERLOAD_DEPTH, \
+            f"queue depth {max_depth} exceeded bound {OVERLOAD_DEPTH}"
+        results[policy] = {
+            "served": len(futs) - n_shed, "rejected": n_rejected,
+            "shed": n_shed, "max_depth": max_depth, "p99_ms": ep.e2e.p99_ms,
+        }
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=512)
@@ -119,6 +214,30 @@ def main():
           f"p50 better on {p50_wins}/{len(cache_cmp)} configurations")
     assert qps_on > qps_off, "cache should raise mean throughput"
     assert p50_wins > len(cache_cmp) / 2, "cache should cut median latency"
+
+    # ---- shard-count sweep (bit-identical across K, asserted inside) -------
+    shard_res = run_shard_sweep(DenseSpace("ip"), corpus, queries,
+                                warmup_queries, workload)
+    print(f"\nshard sweep ({args.requests} requests, results bit-identical "
+          f"across shard counts):\n"
+          f"{'shards':>6} {'qps':>8} {'p50_ms':>8} {'p99_ms':>8}")
+    for k, r in shard_res.items():
+        print(f"{k:>6} {r['qps']:>8.1f} {r['p50_ms']:>8.2f} "
+              f"{r['p99_ms']:>8.2f}")
+
+    # ---- overload sweep (bounded queue, counted drops) ---------------------
+    over_res = run_overload_sweep(pipe, queries, args.requests)
+    print(f"\noverload sweep (queue bound {OVERLOAD_DEPTH}, slowed runner, "
+          f"{args.requests} requests):\n"
+          f"{'policy':>11} {'served':>7} {'rejected':>8} {'shed':>5} "
+          f"{'max_depth':>9} {'p99_ms':>8}")
+    for policy, r in over_res.items():
+        print(f"{policy:>11} {r['served']:>7} {r['rejected']:>8} "
+              f"{r['shed']:>5} {r['max_depth']:>9} {r['p99_ms']:>8.2f}")
+    assert over_res["reject"]["rejected"] > 0, \
+        "flood should trip the depth limit under policy 'reject'"
+    assert over_res["shed_oldest"]["shed"] > 0, \
+        "flood should evict queued requests under policy 'shed_oldest'"
 
 
 if __name__ == "__main__":

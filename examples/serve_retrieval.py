@@ -1,13 +1,16 @@
 """End-to-end async serving driver: the paper's three spaces (dense,
-sparse, fused) as live endpoints of one :class:`RetrievalService`, hit by
-a multi-client load generator.
+sparse, fused) as live endpoints of one :class:`RetrievalService` — plus
+the fused space a second time behind a 2-way sharded corpus — hit by a
+multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
 projection, fused composite) -> train a LETOR fusion re-ranker -> stand
-up a RetrievalService with three endpoints + result cache -> N client
-threads stream requests (hot-query repeats exercise the cache) -> report
-per-endpoint latency percentiles, batch fill, cache hit-rate, and MRR@10
-on the sparse funnel.
+up a RetrievalService with four endpoints + result cache (each endpoint
+with a bounded admission queue) -> N client threads stream requests
+(hot-query repeats exercise the cache) -> report per-endpoint latency
+percentiles, batch fill, overload counters, cache hit-rate, and MRR@10
+on the sparse funnel — and verify the sharded fused endpoint answered
+bit-identically to the unsharded one.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -31,7 +34,7 @@ from repro.core.sparse import SparseVectors, densify
 from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors
 from repro.data.pipeline import pad_tokens
 from repro.data.synthetic import make_corpus, qrels_to_labels
-from repro.serving import RetrievalService
+from repro.serving import RetrievalService, ShardedPipeline
 
 N_CLIENTS = 4
 HOT_FRACTION = 0.3      # share of requests drawn from a small hot set
@@ -88,25 +91,38 @@ def build_service(rc, corpus):
     svc.register_pipeline("dense", dense_pipe, q_dense_all[0],
                           batch_size=16, max_wait_s=0.01)
 
+    fused_space = FusedSpace(v, w_dense=0.5, w_sparse=0.5)
     fused_corpus = FusedVectors(doc_dense, doc_bm25)
     fused_pipe = RetrievalPipeline(
-        BruteForceGenerator(FusedSpace(v, w_dense=0.5, w_sparse=0.5),
-                            fused_corpus),
+        BruteForceGenerator(fused_space, fused_corpus),
         cand_qty=rc.cand_qty, final_qty=10)
     pad_fused = FusedVectors(q_dense_all[0], pad_sp)
     svc.register_pipeline("fused", fused_pipe, pad_fused,
                           batch_size=16, max_wait_s=0.01)
 
+    # the same fused space served from a 2-way sharded corpus: one endpoint,
+    # per-shard search + global merge, bit-identical to "fused"; the bounded
+    # queue with "block" backpressures clients instead of dropping work
+    # (benchmarks/serve_bench.py exercises the reject/shed policies)
+    fused_sharded = ShardedPipeline.from_corpus(
+        fused_space, fused_corpus, n_shards=2,
+        cand_qty=rc.cand_qty, final_qty=10)
+    svc.register_pipeline("fused_sharded", fused_sharded, pad_fused,
+                          batch_size=16, max_wait_s=0.01,
+                          max_queue=1024, overload="block")
+
+    fused_repr = lambda i: (FusedVectors(
+        q_dense_all[i], SparseVectors(q_sparse_all.indices[i],
+                                      q_sparse_all.values[i])), None)
     reprs = {
         "sparse": lambda i: (SparseVectors(q_sparse_all.indices[i],
                                            q_sparse_all.values[i]),
                              q_tokens_all[i]),
         "dense": lambda i: (q_dense_all[i], None),
-        "fused": lambda i: (FusedVectors(
-            q_dense_all[i], SparseVectors(q_sparse_all.indices[i],
-                                          q_sparse_all.values[i])), None),
+        "fused": fused_repr,
+        "fused_sharded": fused_repr,
     }
-    return svc, reprs, train_n
+    return svc, fused_sharded, reprs, train_n
 
 
 def run_load(svc, reprs, query_pool):
@@ -143,7 +159,7 @@ def main():
     rc = smoke_config()
     corpus = make_corpus(n_docs=rc.n_docs, n_queries=200,
                          vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
-    svc, reprs, train_n = build_service(rc, corpus)
+    svc, sharded_pipe, reprs, train_n = build_service(rc, corpus)
 
     with svc:
         # warm-up: one request per endpoint triggers each jit compile so
@@ -157,6 +173,19 @@ def main():
         query_pool = np.arange(train_n, 200)
         records, wall = run_load(svc, reprs, query_pool)
         snap = svc.snapshot()
+
+        # sharded-vs-unsharded spot check: same queries through both fused
+        # endpoints must come back bit-identical
+        check = [int(q) for q in query_pool[:8]]
+        flat = [svc.submit(*reprs["fused"](i), endpoint="fused")
+                for i in check]
+        shrd = [svc.submit(*reprs["fused_sharded"](i),
+                           endpoint="fused_sharded") for i in check]
+        for a, b in zip(flat, shrd):
+            ra, rb = a.result(), b.result()
+            assert np.array_equal(ra.scores, rb.scores)
+            assert np.array_equal(ra.indices, rb.indices)
+    sharded_pipe.close()
 
     # ---- quality on the sparse funnel (one result per unique query) --------
     by_q = {}
@@ -178,10 +207,12 @@ def main():
           f"{snap.cache_hit_rate:.0%} ({snap.cache_hits}/{snap.cache_hits + snap.cache_misses})")
     for name in sorted(snap.endpoints):
         ep = snap.endpoints[name]
-        print(f"  {name:>6}: {ep.n_requests:4d} req in {ep.n_batches:3d} "
+        print(f"  {name:>13}: {ep.n_requests:4d} req in {ep.n_batches:3d} "
               f"batches (fill {ep.mean_batch_fill:.0%}, "
-              f"close size/deadline {ep.closed_by_size}/{ep.closed_by_deadline})  "
+              f"close size/deadline {ep.closed_by_size}/{ep.closed_by_deadline}, "
+              f"rejected/shed {ep.rejected}/{ep.shed})  "
               f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
+    print("fused_sharded bit-identical to fused on spot-check queries")
     print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
     assert snap.cache_hits > 0

@@ -30,6 +30,7 @@ __all__ = [
     "TopK",
     "exact_topk",
     "streaming_topk",
+    "concat_topk",
     "merge_topk",
     "sharded_exact_topk",
     "pad_corpus",
@@ -105,6 +106,20 @@ def streaming_topk(
 
     heap, _ = jax.lax.scan(body, init, (jnp.arange(n_tiles), tiles))
     return heap
+
+
+def concat_topk(parts) -> TopK:
+    """Column-concatenate per-shard candidate lists, preserving their order.
+
+    Order is load-bearing for bit-identical sharded merges: ``lax.top_k``
+    breaks score ties toward the lower slot, so contiguous row-range shards
+    concatenated in row order reproduce the unsharded tie-break (the lower
+    global row id wins in both layouts)."""
+    parts = list(parts)
+    if len(parts) == 1:
+        return parts[0]
+    return TopK(jnp.concatenate([p.scores for p in parts], axis=1),
+                jnp.concatenate([p.indices for p in parts], axis=1))
 
 
 def merge_topk(parts: TopK, k: int) -> TopK:

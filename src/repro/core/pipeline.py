@@ -35,6 +35,7 @@ __all__ = [
     "Reranker",
     "LinearReranker",
     "TreeReranker",
+    "apply_rerankers",
     "RetrievalPipeline",
 ]
 
@@ -154,6 +155,30 @@ class TreeReranker:
         return _reorder(cands, s, keep)
 
 
+def apply_rerankers(
+    cands: TopK,
+    q_tokens: Optional[jax.Array],
+    *,
+    intermediate: Optional[Reranker] = None,
+    final: Optional[Reranker] = None,
+    interm_qty: int = 50,
+    final_qty: int = 10,
+) -> TopK:
+    """The funnel tail: candidates -> (intermediate) -> (final) -> result.
+
+    Shared by :class:`RetrievalPipeline` and the sharded serving path
+    (``repro.serving.sharded``), which reranks once over globally-merged
+    candidates — candidate indices must already be global corpus row ids."""
+    if intermediate is not None:
+        cands = intermediate.rerank(q_tokens, cands, interm_qty)
+    if final is not None:
+        cands = final.rerank(q_tokens, cands, final_qty)
+    else:
+        keep = min(final_qty, cands.scores.shape[1])
+        cands = TopK(cands.scores[:, :keep], cands.indices[:, :keep])
+    return cands
+
+
 @dataclasses.dataclass(frozen=True)
 class RetrievalPipeline:
     """candidate generator -> (optional) intermediate -> (optional) final."""
@@ -167,14 +192,9 @@ class RetrievalPipeline:
 
     def run(self, query_repr, q_tokens: Optional[jax.Array] = None) -> TopK:
         cands = self.generator.generate(query_repr, self.cand_qty)
-        if self.intermediate is not None:
-            cands = self.intermediate.rerank(q_tokens, cands, self.interm_qty)
-        if self.final is not None:
-            cands = self.final.rerank(q_tokens, cands, self.final_qty)
-        else:
-            keep = self.final_qty if self.final_qty <= cands.scores.shape[1] else cands.scores.shape[1]
-            cands = TopK(cands.scores[:, :keep], cands.indices[:, :keep])
-        return cands
+        return apply_rerankers(
+            cands, q_tokens, intermediate=self.intermediate, final=self.final,
+            interm_qty=self.interm_qty, final_qty=self.final_qty)
 
     @classmethod
     def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":

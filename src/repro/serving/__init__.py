@@ -1,20 +1,28 @@
-"""Async retrieval serving: admission queue -> continuous batcher ->
-pipeline -> cache -> stats.  See README.md in this package."""
+"""Async retrieval serving: bounded admission queue -> continuous batcher
+-> (optionally sharded) pipeline -> cache -> stats.  See README.md in this
+package and docs/ARCHITECTURE.md for the full map."""
 
-from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.batcher import (OVERLOAD_POLICIES, ContinuousBatcher,
+                                   Request, ServiceOverloaded)
 from repro.serving.cache import QueryCache, quantized_key
 from repro.serving.router import Router
 from repro.serving.service import RetrievalService
+from repro.serving.sharded import CorpusShard, ShardedPipeline, shard_corpus
 from repro.serving.stats import (EndpointSnapshot, LatencySummary,
                                  ServiceSnapshot, ServingStats)
 
 __all__ = [
     "ContinuousBatcher",
     "Request",
+    "ServiceOverloaded",
+    "OVERLOAD_POLICIES",
     "QueryCache",
     "quantized_key",
     "Router",
     "RetrievalService",
+    "CorpusShard",
+    "ShardedPipeline",
+    "shard_corpus",
     "ServingStats",
     "ServiceSnapshot",
     "EndpointSnapshot",

@@ -1,4 +1,4 @@
-"""Admission queue + continuous batcher.
+"""Admission queue + continuous batcher, with overload admission control.
 
 One :class:`ContinuousBatcher` per endpoint owns an admission queue and a
 worker thread.  The worker closes a batch on whichever knob trips first:
@@ -13,12 +13,27 @@ endpoint's pad query (jit shape stability — the padded rows are scored
 and discarded), run through the endpoint's batched runner, and the rows
 fan back out to per-request futures.  A runner failure fails every
 future in the batch; the worker survives and keeps serving.
+
+Admission control: ``max_queue`` bounds the per-endpoint queue depth.
+At the limit the configured ``overload`` policy decides what gives:
+
+  * ``"block"`` (default) — the submitting thread waits for space:
+    backpressure propagates to the caller, nothing is lost;
+  * ``"reject"`` — ``submit`` raises :class:`ServiceOverloaded`
+    immediately: the caller sees the overload synchronously and can back
+    off or hedge to another replica;
+  * ``"shed_oldest"`` — the oldest *queued* request is evicted (its
+    future fails with :class:`ServiceOverloaded`) and the new one is
+    admitted: freshest-first under overload, bounding queue wait.
+
+Rejected/shed totals are surfaced per endpoint through
+``ServingStats.snapshot()`` alongside the live queue depth and its limit.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue as queue_mod
 import threading
 import time
 from concurrent.futures import Future
@@ -30,9 +45,18 @@ import numpy as np
 
 from repro.serving.stats import ServingStats
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher", "ServiceOverloaded",
+           "OVERLOAD_POLICIES"]
 
 _POLL_S = 0.02   # stop-flag poll while the queue is idle
+
+OVERLOAD_POLICIES = ("block", "reject", "shed_oldest")
+
+
+class ServiceOverloaded(RuntimeError):
+    """An admission queue is at its depth limit: raised by ``submit`` under
+    policy ``"reject"``, set on the evicted request's future under
+    ``"shed_oldest"``."""
 
 
 @dataclasses.dataclass
@@ -48,6 +72,81 @@ class Request:
     cache_key: Optional[bytes] = None
 
 
+class _AdmissionQueue:
+    """Bounded FIFO where admission, overload policy, and close are one
+    atomic decision under one lock (a plain ``queue.Queue`` can't shed its
+    oldest entry or refuse puts after close without racing the worker)."""
+
+    def __init__(self, name: str, max_depth: Optional[int] = None,
+                 policy: str = "block"):
+        if policy not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload policy {policy!r} not in {OVERLOAD_POLICIES}")
+        if max_depth is not None and max_depth < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+        self._name = name
+        self._max = max_depth
+        self._policy = policy
+        self._items: "collections.deque[Request]" = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._closed = False
+
+    def qsize(self) -> int:
+        return len(self._items)       # len() is atomic on deque
+
+    def put(self, item: Request) -> Optional[Request]:
+        """Admit ``item``; returns the evicted request under shed_oldest
+        (else None).  Raises :class:`ServiceOverloaded` (reject at depth)
+        or RuntimeError (closed — also wakes blocked putters)."""
+        with self._lock:
+            while True:
+                if self._closed:
+                    raise RuntimeError(f"batcher {self._name!r} is closed")
+                if self._max is None or len(self._items) < self._max:
+                    self._items.append(item)
+                    self._not_empty.notify()
+                    return None
+                if self._policy == "reject":
+                    raise ServiceOverloaded(
+                        f"endpoint {self._name!r}: admission queue at depth "
+                        f"limit {self._max}")
+                if self._policy == "shed_oldest":
+                    shed = self._items.popleft()
+                    self._items.append(item)
+                    self._not_empty.notify()
+                    return shed
+                # block: wait for the worker to make space (bounded wait so
+                # a missed notify can never wedge the submitter)
+                self._not_full.wait(timeout=_POLL_S)
+
+    def get(self, timeout: float) -> Optional[Request]:
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while not self._items:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._not_empty.wait(timeout=remaining)
+            item = self._items.popleft()
+            self._not_full.notify()
+            return item
+
+    def drain(self) -> List[Request]:
+        with self._lock:
+            items = list(self._items)
+            self._items.clear()
+            self._not_full.notify_all()
+            return items
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._not_full.notify_all()
+            self._not_empty.notify_all()
+
+
 class ContinuousBatcher:
     def __init__(
         self,
@@ -58,6 +157,8 @@ class ContinuousBatcher:
         *,
         batch_size: int = 16,
         max_wait_s: float = 0.01,
+        max_queue: Optional[int] = None,
+        overload: str = "block",
         stats: Optional[ServingStats] = None,
         on_result: Optional[Callable[[Request, Any], None]] = None,
         time_fn: Callable[[], float] = time.monotonic,
@@ -70,17 +171,17 @@ class ContinuousBatcher:
         self.pad_q_tokens = pad_q_tokens
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
+        self.max_queue = max_queue
+        self.overload = overload
         self.stats = stats if stats is not None else ServingStats()
         self.on_result = on_result
         self._time_fn = time_fn
-        self._queue: "queue_mod.Queue[Request]" = queue_mod.Queue()
+        self._queue = _AdmissionQueue(name, max_queue, overload)
         self._stop = threading.Event()
-        # couples the stop check to the enqueue: without it a submit racing
-        # close() could enqueue after the drain pass and hang its future
-        self._submit_lock = threading.Lock()
         self._thread = threading.Thread(
             target=self._loop, name=f"batcher-{name}", daemon=True)
-        self.stats.register_endpoint(name, self._queue.qsize)
+        self.stats.register_endpoint(name, self._queue.qsize,
+                                     depth_limit=max_queue)
         self._thread.start()
 
     # -- client side --------------------------------------------------------
@@ -90,10 +191,17 @@ class ContinuousBatcher:
                 f"endpoint {self.name!r} was registered without "
                 "pad_q_tokens, so per-request q_tokens would be silently "
                 "dropped; register the endpoint with a pad_q_tokens value")
-        with self._submit_lock:
-            if self._stop.is_set():
-                raise RuntimeError(f"batcher {self.name!r} is closed")
-            self._queue.put(request)
+        try:
+            shed = self._queue.put(request)
+        except ServiceOverloaded:
+            self.stats.record_overload(self.name, "rejected")
+            raise
+        if shed is not None:
+            self.stats.record_overload(self.name, "shed")
+            if shed.future.set_running_or_notify_cancel():
+                shed.future.set_exception(ServiceOverloaded(
+                    f"endpoint {self.name!r}: request shed from a full "
+                    f"admission queue (depth limit {self.max_queue})"))
 
     def queue_depth(self) -> int:
         return self._queue.qsize()
@@ -105,12 +213,7 @@ class ContinuousBatcher:
             if batch:
                 self._safe_execute(batch, closed_by)
         # drain: everything still queued is flushed in fixed-size batches
-        leftover: List[Request] = []
-        while True:
-            try:
-                leftover.append(self._queue.get_nowait())
-            except queue_mod.Empty:
-                break
+        leftover = self._queue.drain()
         for i in range(0, len(leftover), self.batch_size):
             self._safe_execute(leftover[i:i + self.batch_size], "drain")
 
@@ -125,9 +228,8 @@ class ContinuousBatcher:
 
     def _gather(self):
         """Block for the first request, then fill until size or deadline."""
-        try:
-            first = self._queue.get(timeout=_POLL_S)
-        except queue_mod.Empty:
+        first = self._queue.get(timeout=_POLL_S)
+        if first is None:
             return [], None
         batch = [first]
         deadline = self._time_fn() + self.max_wait_s
@@ -137,11 +239,10 @@ class ContinuousBatcher:
             remaining = deadline - self._time_fn()
             if remaining <= 0:
                 return batch, "deadline"
-            try:
-                batch.append(
-                    self._queue.get(timeout=min(remaining, _POLL_S)))
-            except queue_mod.Empty:
+            nxt = self._queue.get(timeout=min(remaining, _POLL_S))
+            if nxt is None:
                 continue   # re-check stop flag and deadline
+            batch.append(nxt)
         return batch, "size"
 
     def _assemble(self, batch: List[Request]):
@@ -182,7 +283,8 @@ class ContinuousBatcher:
                 r.future.set_result(result)
 
     def close(self):
-        """Stop accepting, flush the queue, join the worker."""
-        with self._submit_lock:
-            self._stop.set()
+        """Stop accepting (wakes blocked submitters), flush the queue, join
+        the worker.  Requests admitted before close are still served."""
+        self._queue.close()
+        self._stop.set()
         self._thread.join()

@@ -9,6 +9,10 @@ hashing so that float jitter below the quantization step — e.g. the same
 query re-encoded on a different host — still hits.  The endpoint name is
 part of the key: the same vector against the dense and the fused space is
 two different questions.
+
+The cache sits *above* admission control: a hit never touches the
+endpoint's queue, so hot queries keep being answered even while the
+endpoint is saturated and rejecting or shedding new work.
 """
 
 from __future__ import annotations

@@ -2,8 +2,12 @@
 
 The paper's three spaces (dense, sparse, fused) become live endpoints of
 one service; each endpoint owns a :class:`ContinuousBatcher` with its own
-batch-size / deadline knobs, so a cheap sparse lookup and an expensive
-fused funnel never share a batch.
+batch-size / deadline / admission-control knobs, so a cheap sparse lookup
+and an expensive fused funnel never share a batch (or a queue limit).
+
+A sharded corpus is invisible here: a ``ShardedPipeline`` registers as
+one ordinary endpoint, so routing, caching, and stats never learn how
+many shards sit behind it.
 """
 
 from __future__ import annotations

@@ -1,21 +1,34 @@
 """RetrievalService — the async serving facade.
 
-Wires the pieces together::
+Wires the pieces together (the full data-flow map, including sharding and
+admission control, lives in ``docs/ARCHITECTURE.md``)::
 
     submit() --cache hit--> future (already resolved)
         \\--miss--> Router --> per-endpoint ContinuousBatcher
+                                   |  bounded admission queue
+                                   |  (overflow: block | reject | shed)
                                    |  size/deadline close, pad, stack
                                    v
-                          batched runner (RetrievalPipeline.run / jit fn)
+                          batched runner (RetrievalPipeline.run /
+                                          ShardedPipeline.run / jit fn)
                                    |  slice rows, fill cache, record stats
                                    v
                             per-request Future
 
 Endpoints register either a :class:`~repro.core.pipeline.RetrievalPipeline`
-(optionally jitted) or any batched runner ``fn(query_repr, q_tokens) ->
-pytree``.  Results delivered through futures are numpy pytrees (one row of
-the batched output), bit-identical to an offline ``pipeline.run`` on the
-same queries — verified in ``tests/test_serving.py``.
+(optionally jitted), a :class:`~repro.serving.sharded.ShardedPipeline`
+(K corpus shards behind this one endpoint), or any batched runner
+``fn(query_repr, q_tokens) -> pytree``.  Results delivered through futures
+are numpy pytrees (one row of the batched output), bit-identical to an
+offline ``pipeline.run`` on the same queries — verified in
+``tests/test_serving.py`` and ``tests/test_sharded.py``.
+
+Admission control is per endpoint: ``max_queue`` bounds the endpoint's
+queue depth, ``overload`` picks the at-limit policy (``"block"`` —
+backpressure the submitter, ``"reject"`` — raise
+:class:`~repro.serving.batcher.ServiceOverloaded`, ``"shed_oldest"`` —
+evict the stalest queued request).  Cache hits bypass the queue entirely
+and are served even when the endpoint is saturated.
 """
 
 from __future__ import annotations
@@ -54,12 +67,14 @@ class RetrievalService:
         self, name: str, run_fn: Callable[[Any, Optional[Any]], Any],
         pad_query_repr: Any, pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
+        max_queue: Optional[int] = None, overload: str = "block",
     ) -> "RetrievalService":
         if jit:
             run_fn = jax.jit(run_fn)
         batcher = ContinuousBatcher(
             name, run_fn, pad_query_repr, pad_q_tokens,
             batch_size=batch_size, max_wait_s=max_wait_s,
+            max_queue=max_queue, overload=overload,
             stats=self.stats, on_result=self._on_result,
             time_fn=self._time_fn)
         self.router.register(batcher)
@@ -69,13 +84,17 @@ class RetrievalService:
         self, name: str, pipeline, pad_query_repr: Any,
         pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
+        max_queue: Optional[int] = None, overload: str = "block",
     ) -> "RetrievalService":
-        """Serve a :class:`RetrievalPipeline` as endpoint ``name``."""
+        """Serve a :class:`RetrievalPipeline` (or
+        :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
+        batched ``run(query_repr, q_tokens)``) as endpoint ``name``."""
         def run_fn(query_repr, q_tokens):
             return pipeline.run(query_repr, q_tokens)
         return self.register_runner(
             name, run_fn, pad_query_repr, pad_q_tokens,
-            batch_size=batch_size, max_wait_s=max_wait_s, jit=jit)
+            batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
+            max_queue=max_queue, overload=overload)
 
     def endpoints(self):
         return self.router.endpoints()
@@ -83,7 +102,14 @@ class RetrievalService:
     # -- request path --------------------------------------------------------
     def submit(self, query_repr: Any, q_tokens: Optional[Any] = None,
                endpoint: Optional[str] = None) -> Future:
-        """Admit one query; returns a Future of its per-query result."""
+        """Admit one query; returns a Future of its per-query result.
+
+        On an endpoint with ``overload="reject"`` at its depth limit this
+        raises :class:`~repro.serving.batcher.ServiceOverloaded`
+        synchronously (the rejection is counted in the endpoint's stats);
+        with ``"shed_oldest"`` the evicted request's future fails with the
+        same exception instead.  ``n_requests`` counts every admission
+        attempt, served or rejected."""
         if self._closed:
             raise RuntimeError("service is closed")
         batcher = self.router.resolve(endpoint)
@@ -93,8 +119,8 @@ class RetrievalService:
         if self.cache is not None:
             key = self.cache.key(batcher.name, (query_repr, q_tokens))
             hit = self.cache.get(key)
-            self.stats.record_cache(hit is not None)
             if hit is not None:
+                self.stats.record_cache(True)
                 fut: Future = Future()
                 self.stats.record_e2e(batcher.name,
                                       self._time_fn() - t_admit)
@@ -104,6 +130,11 @@ class RetrievalService:
         self.router.dispatch(Request(
             query_repr=query_repr, q_tokens=q_tokens, endpoint=batcher.name,
             future=fut, t_admit=t_admit, cache_key=key))
+        # counted only after dispatch succeeds: a rejected submit is not a
+        # cache miss, so hit-rate keeps meaning "share of admitted requests
+        # answered from cache" even under overload
+        if self.cache is not None:
+            self.stats.record_cache(False)
         return fut
 
     def submit_many(self, queries: Iterable[Any],

@@ -8,6 +8,12 @@ cache hit-rate, and live queue depth — the numbers the latency/throughput
 frontier bench (``benchmarks/serve_bench.py``) and the load-generator
 example report.
 
+Overload observability: endpoints with a bounded admission queue also
+report their depth limit and exact rejected/shed totals, so a dashboard
+can tell "p99 is high because we're queueing" from "p99 is fine because
+we're dropping load" — the e2e percentiles cover only *served* requests;
+rejected/shed requests never reach the latency reservoirs.
+
 All recorders are thread-safe: requests are admitted from client threads
 while batcher worker threads record execution.
 """
@@ -66,6 +72,10 @@ class EndpointSnapshot:
     # exact lifetime sums (the percentile reservoirs are bounded)
     queue_wait_total_s: float = 0.0
     execute_total_s: float = 0.0
+    # admission control (exact lifetime counters)
+    depth_limit: Optional[int] = None   # None = unbounded queue
+    rejected: int = 0               # submits refused under policy "reject"
+    shed: int = 0                   # queued requests evicted ("shed_oldest")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +108,7 @@ class _EndpointStats:
         self.e2e = collections.deque(maxlen=_RESERVOIR)
         self.queue_wait_total_s = 0.0
         self.execute_total_s = 0.0
+        self.overload = collections.Counter()   # "rejected" / "shed"
 
 
 class ServingStats:
@@ -109,16 +120,20 @@ class ServingStats:
         self._t0 = time_fn()
         self._endpoints: Dict[str, _EndpointStats] = {}
         self._depth_fns: Dict[str, Callable[[], int]] = {}
+        self._depth_limits: Dict[str, int] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
     # -- wiring -------------------------------------------------------------
     def register_endpoint(self, name: str,
-                          depth_fn: Optional[Callable[[], int]] = None):
+                          depth_fn: Optional[Callable[[], int]] = None,
+                          depth_limit: Optional[int] = None):
         with self._lock:
             self._endpoints.setdefault(name, _EndpointStats(name))
             if depth_fn is not None:
                 self._depth_fns[name] = depth_fn
+            if depth_limit is not None:
+                self._depth_limits[name] = depth_limit
 
     def _ep(self, name: str) -> _EndpointStats:
         return self._endpoints.setdefault(name, _EndpointStats(name))
@@ -161,6 +176,11 @@ class ServingStats:
         with self._lock:
             self._ep(endpoint).e2e.append(seconds)
 
+    def record_overload(self, endpoint: str, kind: str):
+        """``kind`` is ``"rejected"`` or ``"shed"``."""
+        with self._lock:
+            self._ep(endpoint).overload[kind] += 1
+
     # -- read path ----------------------------------------------------------
     def snapshot(self) -> ServiceSnapshot:
         with self._lock:
@@ -183,6 +203,9 @@ class ServingStats:
                     e2e=LatencySummary.from_samples(ep.e2e),
                     queue_wait_total_s=ep.queue_wait_total_s,
                     execute_total_s=ep.execute_total_s,
+                    depth_limit=self._depth_limits.get(name),
+                    rejected=ep.overload["rejected"],
+                    shed=ep.overload["shed"],
                 )
                 total += ep.n_requests
             return ServiceSnapshot(

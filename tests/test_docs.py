@@ -1,0 +1,68 @@
+"""Docs-rot guard: every relative markdown link in the repo resolves, and
+every command quoted in README.md / ROADMAP.md points at files that exist
+(keeps the documentation pass honest as the tree moves)."""
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — target without whitespace (markdown inline links)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `python path/to/file.py` or `python -m some.module` (also catches pytest
+# invocations, which are spelled `python -m pytest` throughout); whitespace
+# stays on one line so a ```python fence never swallows the next line
+CMD_RE = re.compile(r"\bpython[^\S\n]+(-m[^\S\n]+)?([\w./-]+)")
+# any tests/... path quoted in prose or commands
+TEST_PATH_RE = re.compile(r"\btests/[\w/]+\.py\b")
+
+
+def _md_files():
+    return sorted(p for p in REPO.rglob("*.md")
+                  if not any(part.startswith(".") for part in p.parts))
+
+
+@pytest.mark.parametrize(
+    "md", _md_files(), ids=lambda p: str(p.relative_to(REPO)))
+def test_relative_links_resolve(md):
+    broken = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = (md.parent / target.split("#")[0]).resolve()
+        if not path.exists():
+            broken.append(target)
+    assert not broken, \
+        f"{md.relative_to(REPO)}: broken relative links: {broken}"
+
+
+@pytest.mark.parametrize("doc", ["README.md", "ROADMAP.md"])
+def test_quoted_python_commands_refer_to_real_files(doc):
+    missing = []
+    for dash_m, target in CMD_RE.findall((REPO / doc).read_text()):
+        if dash_m:
+            if target == "pytest":       # stdlib-installed tool, not a file
+                continue
+            mod = REPO / "src" / Path(*target.split("."))
+            if not (mod.with_suffix(".py").exists() or mod.is_dir()):
+                missing.append(f"python -m {target}")
+        elif not (REPO / target).exists():
+            missing.append(f"python {target}")
+    assert not missing, f"{doc} quotes commands on missing files: {missing}"
+
+
+@pytest.mark.parametrize("doc", ["README.md", "ROADMAP.md"])
+def test_quoted_test_paths_exist(doc):
+    missing = [t for t in TEST_PATH_RE.findall((REPO / doc).read_text())
+               if not (REPO / t).exists()]
+    assert not missing, f"{doc} references missing test files: {missing}"
+
+
+def test_tier1_command_documented_consistently():
+    """README's tier-1 invocation must stay the ROADMAP's verify command."""
+    readme = (REPO / "README.md").read_text()
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    assert "python -m pytest -x -q" in readme
+    assert "python -m pytest -x -q" in roadmap

@@ -1,6 +1,8 @@
-"""Serving subsystem: batching, cache, router, stats — and the contract
-that served results are bit-identical to the offline pipeline."""
+"""Serving subsystem: batching, admission control, cache, router, stats —
+and the contract that served results are bit-identical to the offline
+pipeline (the sharded-endpoint contract lives in test_sharded.py)."""
 
+import threading
 import time
 
 import jax
@@ -11,7 +13,8 @@ import pytest
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
 from repro.core.spaces import DenseSpace
 from repro.launch.serve import BatchingServer
-from repro.serving import QueryCache, RetrievalService, quantized_key
+from repro.serving import (QueryCache, RetrievalService, ServiceOverloaded,
+                           quantized_key)
 
 
 @pytest.fixture(scope="module")
@@ -258,6 +261,192 @@ class TestRouter:
         with _service(pipe, q, cache_size=0) as svc:
             with pytest.raises(ValueError, match="already registered"):
                 svc.register_pipeline("dense", pipe, q[0])
+
+
+class _GatedService:
+    """A service whose single worker blocks inside the runner until released:
+    the queue can be filled to an exact depth deterministically."""
+
+    def __init__(self, max_queue, overload):
+        self.gate = threading.Event()
+        self.entered = threading.Event()
+
+        def gated(batch, _tokens):
+            self.entered.set()
+            assert self.gate.wait(timeout=30)
+            return batch
+        self.svc = RetrievalService(cache_size=0)
+        self.svc.register_runner("gated", gated, jnp.zeros((2,)),
+                                 batch_size=1, max_wait_s=0.001,
+                                 max_queue=max_queue, overload=overload)
+
+    def occupy_worker(self):
+        """Park the worker inside a batch so later submits stay queued."""
+        fut = self.svc.submit(jnp.ones((2,)), endpoint="gated")
+        assert self.entered.wait(timeout=10)
+        return fut
+
+    def release(self):
+        self.gate.set()
+
+
+class TestAdmissionControl:
+    def test_reject_at_depth_limit(self):
+        g = _GatedService(max_queue=2, overload="reject")
+        with g.svc:
+            inflight = g.occupy_worker()
+            queued = [g.svc.submit(jnp.ones((2,)), endpoint="gated")
+                      for _ in range(2)]          # fills the queue exactly
+            assert g.svc.stats.snapshot().endpoints["gated"].queue_depth == 2
+            with pytest.raises(ServiceOverloaded, match="depth limit 2"):
+                g.svc.submit(jnp.ones((2,)), endpoint="gated")
+            with pytest.raises(ServiceOverloaded):
+                g.svc.submit(jnp.ones((2,)), endpoint="gated")
+            snap = g.svc.snapshot()
+            g.release()
+            for f in [inflight] + queued:          # admitted work still lands
+                assert f.result(timeout=10) is not None
+        ep = snap.endpoints["gated"]
+        assert ep.rejected == 2 and ep.shed == 0
+        assert ep.depth_limit == 2
+        assert ep.queue_depth <= 2                 # bounded, not unbounded
+
+    def test_shed_oldest_fails_stalest_future(self):
+        g = _GatedService(max_queue=2, overload="shed_oldest")
+        with g.svc:
+            inflight = g.occupy_worker()
+            f_old = g.svc.submit(jnp.full((2,), 1.0), endpoint="gated")
+            f_mid = g.svc.submit(jnp.full((2,), 2.0), endpoint="gated")
+            f_new = g.svc.submit(jnp.full((2,), 3.0), endpoint="gated")
+            # f_old was evicted to make room for f_new
+            with pytest.raises(ServiceOverloaded, match="shed"):
+                f_old.result(timeout=10)
+            snap = g.svc.snapshot()
+            g.release()
+            assert inflight.result(timeout=10) is not None
+            np.testing.assert_allclose(f_mid.result(timeout=10), [2.0, 2.0])
+            np.testing.assert_allclose(f_new.result(timeout=10), [3.0, 3.0])
+        ep = snap.endpoints["gated"]
+        assert ep.shed == 1 and ep.rejected == 0
+
+    def test_block_backpressures_submitter(self):
+        g = _GatedService(max_queue=1, overload="block")
+        with g.svc:
+            g.occupy_worker()
+            g.svc.submit(jnp.ones((2,)), endpoint="gated")   # queue now full
+            done = threading.Event()
+            held = {}
+
+            def submitter():
+                held["fut"] = g.svc.submit(jnp.ones((2,)), endpoint="gated")
+                done.set()
+
+            t = threading.Thread(target=submitter)
+            t.start()
+            assert not done.wait(timeout=0.15)     # blocked at the limit
+            g.release()
+            assert done.wait(timeout=10)           # space freed -> admitted
+            t.join()
+            assert held["fut"].result(timeout=10) is not None
+            snap = g.svc.snapshot()
+        ep = snap.endpoints["gated"]
+        assert ep.rejected == 0 and ep.shed == 0
+
+    def test_close_wakes_blocked_submitter(self):
+        g = _GatedService(max_queue=1, overload="block")
+        g.occupy_worker()
+        g.svc.submit(jnp.ones((2,)), endpoint="gated")
+        errs = []
+
+        def submitter():
+            try:
+                g.svc.submit(jnp.ones((2,)), endpoint="gated")
+            except RuntimeError as e:
+                errs.append(e)
+
+        t = threading.Thread(target=submitter)
+        t.start()
+        time.sleep(0.05)
+        g.release()            # let the drain finish promptly
+        g.svc.close()
+        t.join(timeout=10)
+        assert not t.is_alive()
+
+    def test_unbounded_queue_never_overloads(self, dense_setup):
+        pipe, q = dense_setup
+        with _service(pipe, q, cache_size=0) as svc:   # max_queue=None
+            svc.retrieve([q[i] for i in range(30)], endpoint="dense")
+            snap = svc.snapshot()
+        ep = snap.endpoints["dense"]
+        assert ep.depth_limit is None
+        assert ep.rejected == 0 and ep.shed == 0
+
+    def test_cache_hit_served_while_endpoint_saturated(self):
+        """Hits bypass the admission queue: a saturated endpoint still
+        answers hot queries from the cache."""
+        gate = threading.Event()
+        entered = threading.Event()
+
+        def gated(batch, _tokens):
+            entered.set()
+            assert gate.wait(timeout=30)
+            return batch
+
+        svc = RetrievalService(cache_size=64)
+        svc.register_runner("gated", gated, jnp.zeros((2,)),
+                            batch_size=1, max_wait_s=0.001,
+                            max_queue=1, overload="reject")
+        with svc:
+            hot = jnp.asarray([5.0, 6.0])
+            first = svc.submit(hot, endpoint="gated")
+            assert entered.wait(timeout=10)
+            gate.set()
+            first.result(timeout=10)               # now cached
+            gate.clear()
+            blocker = svc.submit(jnp.ones((2,)), endpoint="gated")
+            assert svc.submit(hot, endpoint="gated").result(timeout=1) \
+                is not None                        # hit, no queue involved
+            gate.set()
+            blocker.result(timeout=10)
+            snap = svc.snapshot()
+        assert snap.cache_hits == 1
+
+    def test_rejected_submit_is_not_a_cache_miss(self):
+        """Hit-rate must keep meaning 'share of admitted requests answered
+        from cache': a ServiceOverloaded submit never counts as a miss."""
+        gate = threading.Event()
+        entered = threading.Event()
+
+        def gated(batch, _tokens):
+            entered.set()
+            assert gate.wait(timeout=30)
+            return batch
+
+        svc = RetrievalService(cache_size=64)
+        svc.register_runner("gated", gated, jnp.zeros((2,)),
+                            batch_size=1, max_wait_s=0.001,
+                            max_queue=1, overload="reject")
+        with svc:
+            first = svc.submit(jnp.ones((2,)), endpoint="gated")   # 1 miss
+            assert entered.wait(timeout=10)
+            svc.submit(jnp.full((2,), 2.0), endpoint="gated")      # 1 miss
+            with pytest.raises(ServiceOverloaded):
+                svc.submit(jnp.full((2,), 3.0), endpoint="gated")
+            snap_mid = svc.snapshot()
+            gate.set()
+            first.result(timeout=10)
+        assert snap_mid.cache_misses == 2          # the rejection: not a miss
+        assert snap_mid.endpoints["gated"].rejected == 1
+
+    def test_invalid_policy_and_depth_rejected(self):
+        svc = RetrievalService(cache_size=0)
+        with pytest.raises(ValueError, match="overload policy"):
+            svc.register_runner("bad", lambda b, _t: b, jnp.zeros((2,)),
+                                overload="drop_newest")
+        with pytest.raises(ValueError, match="max_queue"):
+            svc.register_runner("bad2", lambda b, _t: b, jnp.zeros((2,)),
+                                max_queue=0)
+        svc.close()
 
 
 class TestCompatShim:
