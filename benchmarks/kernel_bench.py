@@ -1,34 +1,50 @@
 """Kernel microbenchmarks: the NMSLIB SIMD-scan analogue.
 
 Wall-clock here is CPU interpret-mode (NOT representative of TPU); what
-matters and is recorded: (a) kernel output == oracle, (b) the analytic
-bytes/FLOPs per call from which the TPU-side roofline expectation is
-derived (corpus-stream bandwidth bound; see kernels/mips_topk.py)."""
+matters and is recorded: (a) every execution backend (reference /
+streaming / pallas) produces bit-identical output through the one
+``ExecutionBackend.topk`` seam, (b) the analytic bytes/FLOPs per call
+from which the TPU-side roofline expectation is derived (corpus-stream
+bandwidth bound; see kernels/mips_topk.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.kernels import ops, ref
+from repro.core.backends import make_backend
+from repro.core.spaces import DenseSpace
+from repro.kernels import ops
+
+BACKENDS = ("reference", "streaming", "pallas")
 
 
 def run(csv_rows):
     print("\n=== kernel microbench (CPU interpret mode) ===")
+    space = DenseSpace("ip")
     for b, n, d, k in [(8, 4096, 128, 16), (16, 8192, 64, 10)]:
         q = jax.random.normal(jax.random.PRNGKey(0), (b, d), jnp.float32)
         c = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
-        us_kernel, out = time_call(
-            lambda q, c: ops.mips_topk(q, c, k, tile_n=1024), q, c)
-        us_ref, _ = time_call(lambda q, c: ref.mips_topk_ref(q, c, k), q, c)
         stream_bytes = n * d * 4 + b * k * 8
         tpu_us = stream_bytes / 819e9 * 1e6   # v5e HBM-bound expectation
-        print(f"mips_topk B{b} N{n} D{d} K{k}: kernel {us_kernel:.0f}us "
-              f"ref {us_ref:.0f}us | TPU roofline expectation {tpu_us:.1f}us")
-        csv_rows.append((f"kernel/mips_topk_B{b}N{n}", round(us_kernel, 1),
-                         round(tpu_us, 2)))
-        csv_rows.append((f"kernel/mips_topk_ref_B{b}N{n}", round(us_ref, 1),
-                         None))
+        outs, line = {}, []
+        for name in BACKENDS:
+            backend = make_backend(name, **({"tile_n": 1024}
+                                            if name != "reference" else {}))
+            us, out = time_call(
+                lambda q, c, be=backend: be.topk(space, q, c, k), q, c)
+            outs[name] = out
+            line.append(f"{name} {us:.0f}us")
+            csv_rows.append((f"kernel/mips_topk_{name}_B{b}N{n}",
+                             round(us, 1),
+                             round(tpu_us, 2) if name == "pallas" else None))
+        for name in BACKENDS[1:]:
+            assert np.array_equal(np.asarray(outs[name].scores),
+                                  np.asarray(outs["reference"].scores)), name
+            assert np.array_equal(np.asarray(outs[name].indices),
+                                  np.asarray(outs["reference"].indices)), name
+        print(f"mips_topk B{b} N{n} D{d} K{k}: {' | '.join(line)} "
+              f"(bit-identical) | TPU roofline expectation {tpu_us:.1f}us")
 
     from repro.core.sparse import from_dense
     rng = np.random.default_rng(0)

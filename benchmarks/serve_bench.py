@@ -1,5 +1,6 @@
 """Serving latency/throughput frontier: batch-size x deadline x cache,
-plus a shard-count sweep and an overload (admission-control) sweep.
+plus shard-count, overload (admission-control), and execution-backend
+sweeps.
 
 Stands up a fresh :class:`RetrievalService` per configuration around a
 brute-force dense funnel, replays a repeated-query workload (hot-set
@@ -13,7 +14,11 @@ returns bit-identical results.  The overload sweep floods a bounded
 admission queue (a deliberately slowed runner) under each policy and
 reports served/rejected/shed, the maximum observed queue depth, and p99
 under overload — the depth stays bounded instead of growing without
-limit.
+limit.  The backend sweep serves the same corpus through each execution
+backend (reference / streaming / pallas-interpret), asserts bit-identical
+answers, and emits per-backend p50/p99 to ``BENCH_backends.json`` as a
+trajectory point (interpret-mode kernel wall-clock is a correctness
+trace, not TPU perf — see ``benchmarks/kernel_bench.py``).
 
     PYTHONPATH=src python benchmarks/serve_bench.py
 """
@@ -21,6 +26,7 @@ limit.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -41,6 +47,7 @@ DEADLINES_S = (0.002, 0.01)
 SHARD_COUNTS = (1, 2, 4)
 OVERLOAD_POLICIES = ("reject", "shed_oldest")
 OVERLOAD_DEPTH = 32       # admission-queue bound during the flood
+BACKENDS = ("reference", "streaming", "pallas")
 
 
 def make_workload(n_requests: int, seed: int = 0) -> np.ndarray:
@@ -124,6 +131,52 @@ def run_shard_sweep(space, corpus, queries, warmup_queries, workload):
     return results
 
 
+def run_backend_sweep(pipe, queries, warmup_queries, workload,
+                      out_path: str):
+    """Same corpus, same workload, one endpoint per execution backend.
+
+    Answers must be bit-identical across backends (they are all exact);
+    per-backend p50/p99/qps land in ``out_path`` as one trajectory point.
+    """
+    results, reference = {}, None
+    check_n = 8
+    for backend in BACKENDS:
+        svc = RetrievalService(cache_size=0)
+        svc.register_pipeline("dense", pipe, queries[0],
+                              batch_size=16, max_wait_s=0.005,
+                              backend=backend)
+        with svc:
+            svc.retrieve([warmup_queries[i % warmup_queries.shape[0]]
+                          for i in range(16)], endpoint="dense")
+            svc.reset_stats()
+            t0 = time.perf_counter()
+            futs = [svc.submit(queries[i], endpoint="dense")
+                    for i in workload]
+            for f in futs:
+                f.result()
+            wall = time.perf_counter() - t0
+            snap = svc.snapshot()
+            check = svc.retrieve([queries[i] for i in range(check_n)],
+                                 endpoint="dense")
+        ep = snap.endpoints["dense"]
+        assert ep.backend and ep.backend.startswith(backend), \
+            f"stats should surface the backend: {ep.backend!r}"
+        results[backend] = {"identity": ep.backend,
+                            "qps": len(futs) / wall,
+                            "p50_ms": ep.e2e.p50_ms, "p99_ms": ep.e2e.p99_ms}
+        if reference is None:
+            reference = check
+        else:
+            for a, b in zip(reference, check):
+                assert np.array_equal(a.scores, b.scores), backend
+                assert np.array_equal(a.indices, b.indices), backend
+    with open(out_path, "w") as f:
+        json.dump({"bench": "serve_backends", "n_docs": N_DOCS, "dim": DIM,
+                   "requests": len(workload), "platform": jax.default_backend(),
+                   "backends": results}, f, indent=2)
+    return results
+
+
 def run_overload_sweep(pipe, queries, n_requests: int):
     """Flood a bounded queue through a deliberately slowed runner."""
     jit_run = jax.jit(pipe.run)
@@ -173,6 +226,8 @@ def run_overload_sweep(pipe, queries, n_requests: int):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--backends-out", default="BENCH_backends.json",
+                    help="where the backend-sweep trajectory point lands")
     args = ap.parse_args()
     if args.requests <= 0:
         ap.error("--requests must be positive")
@@ -224,6 +279,16 @@ def main():
     for k, r in shard_res.items():
         print(f"{k:>6} {r['qps']:>8.1f} {r['p50_ms']:>8.2f} "
               f"{r['p99_ms']:>8.2f}")
+
+    # ---- backend sweep (bit-identical across backends, asserted inside) ----
+    back_res = run_backend_sweep(pipe, queries, warmup_queries, workload,
+                                 args.backends_out)
+    print(f"\nbackend sweep ({args.requests} requests, results bit-identical "
+          f"across backends; point written to {args.backends_out}):\n"
+          f"{'backend':>10} {'qps':>8} {'p50_ms':>8} {'p99_ms':>8}  identity")
+    for name, r in back_res.items():
+        print(f"{name:>10} {r['qps']:>8.1f} {r['p50_ms']:>8.2f} "
+              f"{r['p99_ms']:>8.2f}  {r['identity']}")
 
     # ---- overload sweep (bounded queue, counted drops) ---------------------
     over_res = run_overload_sweep(pipe, queries, args.requests)

@@ -1,16 +1,18 @@
 """End-to-end async serving driver: the paper's three spaces (dense,
 sparse, fused) as live endpoints of one :class:`RetrievalService` — plus
-the fused space a second time behind a 2-way sharded corpus — hit by a
-multi-client load generator.
+the fused space a second time behind a 2-way sharded corpus, and the
+dense space a second time through the Pallas fused-kernel execution
+backend — hit by a multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
 projection, fused composite) -> train a LETOR fusion re-ranker -> stand
-up a RetrievalService with four endpoints + result cache (each endpoint
+up a RetrievalService with five endpoints + result cache (each endpoint
 with a bounded admission queue) -> N client threads stream requests
 (hot-query repeats exercise the cache) -> report per-endpoint latency
-percentiles, batch fill, overload counters, cache hit-rate, and MRR@10
-on the sparse funnel — and verify the sharded fused endpoint answered
-bit-identically to the unsharded one.
+percentiles, batch fill, overload counters, execution backend, cache
+hit-rate, and MRR@10 on the sparse funnel — and verify that the sharded
+fused endpoint answered bit-identically to the unsharded one and the
+pallas dense endpoint bit-identically to the reference one.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -74,7 +76,8 @@ def build_service(rc, corpus):
           f"weights {np.round(np.asarray(w), 3)}")
     reranker = LinearReranker(comp, w)
 
-    # ---- the service: three spaces as endpoints ----------------------------
+    # ---- the service: the paper's spaces as endpoints (dense served twice:
+    # reference and pallas execution backends over one corpus) ---------------
     svc = RetrievalService(cache_size=2048)
 
     def sparse_funnel(q_sp, q_tok):
@@ -89,7 +92,15 @@ def build_service(rc, corpus):
         BruteForceGenerator(DenseSpace("ip"), doc_dense),
         cand_qty=rc.cand_qty, final_qty=10)
     svc.register_pipeline("dense", dense_pipe, q_dense_all[0],
-                          batch_size=16, max_wait_s=0.01)
+                          batch_size=16, max_wait_s=0.01,
+                          backend="reference")
+
+    # the same corpus and funnel through the Pallas fused MIPS+top-k
+    # kernel (interpret mode off-TPU): one registration kwarg is the whole
+    # difference, and the answers are bit-identical to "dense"
+    svc.register_pipeline("dense_pallas", dense_pipe, q_dense_all[0],
+                          batch_size=16, max_wait_s=0.01,
+                          backend="pallas")
 
     fused_space = FusedSpace(v, w_dense=0.5, w_sparse=0.5)
     fused_corpus = FusedVectors(doc_dense, doc_bm25)
@@ -119,6 +130,7 @@ def build_service(rc, corpus):
                                            q_sparse_all.values[i]),
                              q_tokens_all[i]),
         "dense": lambda i: (q_dense_all[i], None),
+        "dense_pallas": lambda i: (q_dense_all[i], None),
         "fused": fused_repr,
         "fused_sharded": fused_repr,
     }
@@ -174,17 +186,20 @@ def main():
         records, wall = run_load(svc, reprs, query_pool)
         snap = svc.snapshot()
 
-        # sharded-vs-unsharded spot check: same queries through both fused
-        # endpoints must come back bit-identical
+        # sharded-vs-unsharded and pallas-vs-reference spot checks: same
+        # queries through both members of each pair must come back
+        # bit-identical
         check = [int(q) for q in query_pool[:8]]
-        flat = [svc.submit(*reprs["fused"](i), endpoint="fused")
-                for i in check]
-        shrd = [svc.submit(*reprs["fused_sharded"](i),
-                           endpoint="fused_sharded") for i in check]
-        for a, b in zip(flat, shrd):
-            ra, rb = a.result(), b.result()
-            assert np.array_equal(ra.scores, rb.scores)
-            assert np.array_equal(ra.indices, rb.indices)
+        for ep_a, ep_b in (("fused", "fused_sharded"),
+                           ("dense", "dense_pallas")):
+            futs_a = [svc.submit(*reprs[ep_a](i), endpoint=ep_a)
+                      for i in check]
+            futs_b = [svc.submit(*reprs[ep_b](i), endpoint=ep_b)
+                      for i in check]
+            for a, b in zip(futs_a, futs_b):
+                ra, rb = a.result(), b.result()
+                assert np.array_equal(ra.scores, rb.scores), (ep_a, ep_b)
+                assert np.array_equal(ra.indices, rb.indices), (ep_a, ep_b)
     sharded_pipe.close()
 
     # ---- quality on the sparse funnel (one result per unique query) --------
@@ -210,9 +225,11 @@ def main():
         print(f"  {name:>13}: {ep.n_requests:4d} req in {ep.n_batches:3d} "
               f"batches (fill {ep.mean_batch_fill:.0%}, "
               f"close size/deadline {ep.closed_by_size}/{ep.closed_by_deadline}, "
-              f"rejected/shed {ep.rejected}/{ep.shed})  "
+              f"rejected/shed {ep.rejected}/{ep.shed}, "
+              f"backend {ep.backend or '-'})  "
               f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
-    print("fused_sharded bit-identical to fused on spot-check queries")
+    print("fused_sharded bit-identical to fused, dense_pallas "
+          "bit-identical to dense on spot-check queries")
     print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
     assert snap.cache_hits > 0

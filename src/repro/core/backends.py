@@ -1,0 +1,313 @@
+"""Execution backends — one top-k API, selectable implementation paths.
+
+The paper's flexibility story is that search is structure-agnostic at the
+*space* layer (any (data format, distance) pair behind one interface);
+this module gives the repo the same property at the *execution* layer.
+Everything that scores a corpus — :class:`~repro.core.pipeline.
+BruteForceGenerator`, the sharded serving path, endpoint registration —
+goes through a small :class:`ExecutionBackend` protocol::
+
+    backend.topk(space, query_repr, corpus, k, n_valid) -> TopK
+
+with three registered implementations:
+
+  * ``reference`` — one-shot ``exact_topk`` (full [B, N] score matrix);
+    serves *every* space/corpus and is the semantic ground truth.
+  * ``streaming`` — tiled ``streaming_topk`` (bounded memory, corpus
+    scanned in ``tile_n`` row tiles); dense ``[N, D]`` corpora only.
+  * ``pallas`` — the fused MIPS+top-k kernel
+    (:mod:`repro.kernels.mips_topk`): score tile + top-k merge in one
+    VMEM-resident loop.  Dense f32/bf16 corpora under ip/l2 only;
+    interpret mode off-TPU (same arithmetic, CPU speed).
+
+All three produce **bit-identical f32 scores and indices** for the
+spaces they share (dense ip/l2): the kernel's per-element arithmetic
+orders match ``spaces.dense_scores`` exactly, and every selection path
+breaks score ties toward the lower corpus row id
+(``tests/test_backends.py`` sweeps this).
+
+:func:`resolve_backend` is the one chooser: it accepts a backend name,
+``"auto"``, or an instance, runs the capability check against the actual
+(space, corpus) pair, clamps tile sizes to legal values, and *falls back
+to* ``reference`` when the requested path cannot serve the space (e.g.
+the kernel asked to score a sparse or fused corpus) — flexibility never
+breaks, it just takes the library path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.brute_force import TopK, exact_topk, pad_corpus, streaming_topk
+from repro.core.spaces import DenseSpace
+
+__all__ = [
+    "ExecutionBackend",
+    "ReferenceBackend",
+    "StreamingBackend",
+    "PallasBackend",
+    "register_backend",
+    "available_backends",
+    "make_backend",
+    "resolve_backend",
+    "backend_identity",
+    "legal_tile",
+    "AUTO_PALLAS_MIN_ROWS",
+    "AUTO_STREAMING_MIN_ROWS",
+]
+
+# auto-selection thresholds (rows): below these the one-shot reference
+# path is both fastest and simplest — tiling only pays once the [B, N]
+# score matrix or the HBM corpus stream starts to matter.
+AUTO_PALLAS_MIN_ROWS = 4096
+AUTO_STREAMING_MIN_ROWS = 32768
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """The seam every corpus-scoring call flows through."""
+
+    name: str
+
+    @property
+    def identity(self) -> str:
+        """Stable configuration string (folded into serving cache keys)."""
+        ...
+
+    def supports(self, space, corpus) -> Optional[str]:
+        """None if this backend can serve (space, corpus); else the reason."""
+        ...
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        ...
+
+
+def legal_tile(n_rows: int, requested: int) -> int:
+    """Clamp a requested tile to the corpus: a tile never exceeds N, so
+    padding waste is bounded by one tile."""
+    return max(1, min(requested, n_rows))
+
+
+def _dense_rows(corpus) -> Optional[int]:
+    """Row count if ``corpus`` is a dense [N, D] array, else None."""
+    if isinstance(corpus, (jax.Array, np.ndarray)) and corpus.ndim == 2:
+        return int(corpus.shape[0])
+    return None
+
+
+def _reference_tail(head: TopK, b: int, k: int, n_valid: int) -> TopK:
+    """Extend a ``min(k, n_valid)``-column result to ``k`` columns with the
+    reference path's degenerate tail: -inf scores and indices continuing
+    from the first masked row (``lax.top_k`` ties break toward the lower
+    row id, so ``exact_topk`` emits n_valid, n_valid+1, ... there).  Keeps
+    the tiled paths bit-identical to reference even when the caller asks
+    for more results than there are valid rows."""
+    pad = k - head.scores.shape[1]
+    scores = jnp.concatenate(
+        [head.scores, jnp.full((b, pad), -jnp.inf, jnp.float32)], axis=1)
+    ids = n_valid + jnp.arange(pad, dtype=jnp.int32)
+    indices = jnp.concatenate(
+        [head.indices, jnp.broadcast_to(ids, (b, pad))], axis=1)
+    return TopK(scores, indices)
+
+
+def _empty_topk(b: int) -> TopK:
+    return TopK(jnp.zeros((b, 0), jnp.float32), jnp.zeros((b, 0), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    """One-shot exact top-k (``exact_topk``): the ground-truth path.
+    Serves any space/corpus whose ``score_batch`` is defined."""
+
+    name = "reference"
+
+    @property
+    def identity(self) -> str:
+        return "reference"
+
+    def supports(self, space, corpus) -> Optional[str]:
+        return None
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        return exact_topk(space, query_repr, corpus, k, n_valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingBackend:
+    """Tiled exact top-k (``streaming_topk``): bounded memory, dense
+    corpora only.  Non-multiple corpus sizes are zero-padded up to the
+    tile (padding rows masked -inf via the valid count)."""
+
+    tile_n: int = 8192
+    name = "streaming"
+
+    @property
+    def identity(self) -> str:
+        return f"streaming(tile_n={self.tile_n})"
+
+    def supports(self, space, corpus) -> Optional[str]:
+        if _dense_rows(corpus) is None:
+            return "streaming backend needs a dense [N, D] corpus array"
+        return None
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        n = corpus.shape[0]
+        tile = legal_tile(n, self.tile_n)
+        n_valid = n if n_valid is None else min(n_valid, n)
+        k_eff = min(k, n_valid)     # the streaming heap's -inf init slots
+        b = query_repr.shape[0]     # must never displace reference's tail
+        if n % tile:
+            corpus, _ = pad_corpus(corpus, tile)
+        head = (streaming_topk(space, query_repr, corpus, k_eff,
+                               tile_n=tile, n_valid=n_valid)
+                if k_eff else _empty_topk(b))
+        return (head if k_eff == k
+                else _reference_tail(head, b, k, n_valid))
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    """The fused MIPS+top-k kernel (``kernels.mips_topk``).
+
+    ``interpret=None`` resolves per platform: compiled on TPU,
+    interpret mode elsewhere (identical arithmetic, CPU speed — the
+    parity tests and CI run exactly this path)."""
+
+    tile_n: int = 2048
+    interpret: Optional[bool] = None
+    name = "pallas"
+
+    _DTYPES = ("float32", "bfloat16")
+
+    @property
+    def identity(self) -> str:
+        interp = "auto" if self.interpret is None else self.interpret
+        return f"pallas(tile_n={self.tile_n},interpret={interp})"
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def supports(self, space, corpus) -> Optional[str]:
+        if not isinstance(space, DenseSpace):
+            return (f"pallas kernel serves DenseSpace only, "
+                    f"not {type(space).__name__}")
+        if space.kind not in ("ip", "l2"):
+            return f"pallas kernel serves ip/l2, not {space.kind!r}"
+        if _dense_rows(corpus) is None:
+            return "pallas kernel needs a dense [N, D] corpus array"
+        if str(corpus.dtype) not in self._DTYPES:
+            return (f"pallas kernel serves {self._DTYPES} corpora, "
+                    f"not {corpus.dtype}")
+        return None
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        from repro.kernels import ops   # lazy: kernels import core
+
+        n = corpus.shape[0]
+        n_valid = n if n_valid is None else min(n_valid, n)
+        k_eff = min(k, n_valid)     # the kernel masks with f32-min, not
+        b = query_repr.shape[0]     # -inf: keep its output to valid rows
+        head = (ops.mips_topk(
+                    query_repr, corpus, k_eff,
+                    tile_n=legal_tile(n, self.tile_n),
+                    space=space.kind, interpret=self._interpret(),
+                    n_valid=n_valid)
+                if k_eff else _empty_topk(b))
+        return (head if k_eff == k
+                else _reference_tail(head, b, k, n_valid))
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., ExecutionBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., ExecutionBackend]):
+    """Register a backend factory under ``name`` (overwrites allowed, so
+    downstream code can swap in instrumented variants)."""
+    _REGISTRY[name] = factory
+
+
+def available_backends():
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(name: str, **kwargs) -> ExecutionBackend:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+    return factory(**kwargs)
+
+
+register_backend("reference", ReferenceBackend)
+register_backend("streaming", StreamingBackend)
+register_backend("pallas", PallasBackend)
+
+
+def _auto(space, corpus, tile_n: Optional[int] = None) -> ExecutionBackend:
+    """Size/dtype/platform policy: kernel on TPU for large dense corpora,
+    streaming once the score matrix stops fitting comfortably, reference
+    otherwise (small corpora, sparse/fused spaces)."""
+    n = _dense_rows(corpus)
+    if n is None:
+        return ReferenceBackend()
+    pallas = (PallasBackend(tile_n=tile_n) if tile_n else PallasBackend())
+    if (jax.default_backend() == "tpu" and n >= AUTO_PALLAS_MIN_ROWS
+            and pallas.supports(space, corpus) is None):
+        return pallas
+    if n >= AUTO_STREAMING_MIN_ROWS:
+        return (StreamingBackend(tile_n=tile_n) if tile_n
+                else StreamingBackend())
+    return ReferenceBackend()
+
+
+def resolve_backend(backend="auto", space=None, corpus=None,
+                    **kwargs) -> ExecutionBackend:
+    """Name / ``"auto"`` / instance -> a backend that can serve
+    (space, corpus).
+
+    An explicit name or instance whose capability check refuses the pair
+    falls back to ``reference`` (the NMSLIB property: any space stays
+    searchable; it just takes the library path).  With ``space``/
+    ``corpus`` omitted the capability check is skipped — the caller only
+    wants the instance (e.g. a label at endpoint registration).
+    ``kwargs`` (``tile_n``, ``interpret``) reach the named backend's
+    constructor.
+    """
+    if backend is None:
+        backend = "auto"
+    if isinstance(backend, str):
+        if backend == "auto":
+            return _auto(space, corpus, tile_n=kwargs.get("tile_n"))
+        resolved = make_backend(backend, **kwargs)
+    else:
+        resolved = backend   # already an instance
+    if space is not None and corpus is not None:
+        if resolved.supports(space, corpus) is not None:
+            return ReferenceBackend()
+    return resolved
+
+
+def backend_identity(backend) -> Optional[str]:
+    """Best-effort identity string for stats/cache: None stays None,
+    strings pass through, backend instances report ``identity``."""
+    if backend is None or isinstance(backend, str):
+        return backend
+    return getattr(backend, "identity", None)

@@ -20,7 +20,8 @@ from typing import Callable, Optional, Protocol
 import jax
 import jax.numpy as jnp
 
-from repro.core.brute_force import TopK, exact_topk, streaming_topk
+from repro.core.backends import ReferenceBackend, StreamingBackend, resolve_backend
+from repro.core.brute_force import TopK
 from repro.core import graph_ann, napp
 from repro.core.inverted_index import InvertedIndex, daat_topk
 from repro.core.scorers import CompositeExtractor
@@ -46,19 +47,41 @@ class CandidateGenerator(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class BruteForceGenerator:
-    """Exact MIPS over any space (dense / sparse / fused)."""
+    """Exact MIPS over any space (dense / sparse / fused).
+
+    ``backend`` selects the execution path (an
+    :class:`~repro.core.backends.ExecutionBackend` instance, a name, or
+    ``"auto"``); ``None`` keeps the historical one-shot reference path.
+    Every backend is exact — they return bit-identical results on the
+    spaces they share, so swapping backends never changes answers."""
 
     space: object
     corpus: object
     n_valid: Optional[int] = None
+    backend: Optional[object] = None
 
     def generate(self, query_repr, k: int) -> TopK:
-        return exact_topk(self.space, query_repr, self.corpus, k, self.n_valid)
+        backend = self.backend
+        if backend is None:
+            backend = ReferenceBackend()
+        elif isinstance(backend, str):   # name / "auto" straight from the
+            backend = resolve_backend(   # constructor, not via with_backend
+                backend, self.space, self.corpus)
+        return backend.topk(self.space, query_repr, self.corpus, k, self.n_valid)
+
+    def with_backend(self, backend) -> "BruteForceGenerator":
+        """Same space/corpus, different execution path (resolved against
+        this generator's space/corpus, so an incapable backend falls back
+        to reference instead of failing at query time)."""
+        return dataclasses.replace(
+            self, backend=resolve_backend(backend, self.space, self.corpus))
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamingGenerator:
-    """Tiled exact MIPS (bounded memory); dense corpora only."""
+    """Tiled exact MIPS (bounded memory); dense corpora only.  Kept as a
+    convenience alias for ``BruteForceGenerator`` with the streaming
+    backend pinned."""
 
     space: object
     corpus: jax.Array
@@ -66,7 +89,19 @@ class StreamingGenerator:
     n_valid: Optional[int] = None
 
     def generate(self, query_repr, k: int) -> TopK:
-        return streaming_topk(self.space, query_repr, self.corpus, k, self.tile_n, self.n_valid)
+        return StreamingBackend(tile_n=self.tile_n).topk(
+            self.space, query_repr, self.corpus, k, self.n_valid)
+
+    def with_backend(self, backend) -> BruteForceGenerator:
+        # forward this generator's tile to tiled targets: it was chosen to
+        # bound the working set, which a default tile would silently undo
+        kwargs = ({"tile_n": self.tile_n}
+                  if isinstance(backend, str) and backend != "reference"
+                  else {})
+        return BruteForceGenerator(
+            self.space, self.corpus, self.n_valid,
+            backend=resolve_backend(backend, self.space, self.corpus,
+                                    **kwargs))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,15 +231,34 @@ class RetrievalPipeline:
             cands, q_tokens, intermediate=self.intermediate, final=self.final,
             interm_qty=self.interm_qty, final_qty=self.final_qty)
 
+    @property
+    def backend(self):
+        """The generator's execution backend, if it has one."""
+        return getattr(self.generator, "backend", None)
+
+    def with_backend(self, backend) -> "RetrievalPipeline":
+        """Same funnel, different execution path under the generator.
+        Raises TypeError for generators without a backend seam (graph-ANN,
+        NAPP, inverted index — their search loops are the algorithm)."""
+        if not hasattr(self.generator, "with_backend"):
+            raise TypeError(
+                f"generator {type(self.generator).__name__} does not take "
+                "an execution backend")
+        return dataclasses.replace(
+            self, generator=self.generator.with_backend(backend))
+
     @classmethod
     def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":
         """Paper Fig. 4 experiment descriptor.  Recognised keys:
-        candProv (name into context), extrType / extrTypeInterm (extractor
+        candProv (name into context), backend (execution backend name for
+        the candidate stage), extrType / extrTypeInterm (extractor
         configs), model / modelInterm (weight arrays or ensembles),
         candQty / intermQty / finalQty."""
         from repro.core.fusion import ObliviousTreeEnsemble
 
         gen = context[desc.get("candProv", "candidate_provider")]
+        if "backend" in desc:
+            gen = gen.with_backend(desc["backend"])
 
         def build(extr_key, model_key):
             if extr_key not in desc:

@@ -48,8 +48,11 @@ def dense_scores(kind: str, q: jax.Array, d: jax.Array, p: float = 2.0) -> jax.A
         return qn @ dn.T
     if kind == "l2":
         # -||q - d||^2 via the matmul identity: MXU-friendly, no B*N*D blowup.
-        q2 = jnp.sum(q * q, axis=-1, keepdims=True)        # [B,1]
-        d2 = jnp.sum(d * d, axis=-1, keepdims=True).T      # [1,N]
+        # Norms via einsum (a dot_general): unlike a fused mul+reduce, its
+        # accumulation order is stable across eager/jit/scan contexts, so
+        # every execution backend reproduces these scores bit for bit.
+        q2 = jnp.einsum("bd,bd->b", q, q)[:, None]         # [B,1]
+        d2 = jnp.einsum("nd,nd->n", d, d)[None, :]         # [1,N]
         return -(q2 + d2 - 2.0 * (q @ d.T))
     if kind == "lp":
         diff = jnp.abs(q[:, None, :] - d[None, :, :])      # [B,N,D] (small D only)

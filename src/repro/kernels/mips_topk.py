@@ -67,9 +67,12 @@ def _kernel(q_ref, c_ref, out_s_ref, out_i_ref, s_scr, i_scr, *,
     s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # [B, TILE_N]
     if space == "l2":
-        q2 = jnp.sum(q * q, axis=1, keepdims=True)       # [B, 1]
-        c2 = jnp.sum(c * c, axis=1)[None, :]             # [1, TILE_N]
-        s = 2.0 * s - q2 - c2                            # = -||q - c||^2
+        # = -||q - c||^2; einsum norms + this exact grouping mirror
+        # spaces.dense_scores so f32 results are bit-identical to the
+        # library path in every compilation context
+        q2 = jnp.einsum("bd,bd->b", q, q)[:, None]       # [B, 1]
+        c2 = jnp.einsum("nd,nd->n", c, c)[None, :]       # [1, TILE_N]
+        s = -(q2 + c2 - 2.0 * s)
     base = t * tile_n
     ids = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(ids < n_valid, s, NEG)

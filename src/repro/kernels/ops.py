@@ -18,18 +18,23 @@ from repro.kernels.mips_topk import mips_topk_pallas
 from repro.kernels.sparse_dense import fused_score_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile_n", "space", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "space",
+                                             "interpret", "n_valid"))
 def mips_topk(queries: jax.Array, corpus: jax.Array, k: int,
               tile_n: int = 2048, space: str = "ip",
-              interpret: bool = True) -> TopK:
-    """Kernelised exact k-NN over a dense corpus (pads N up to tile_n)."""
+              interpret: bool = True,
+              n_valid: int | None = None) -> TopK:
+    """Kernelised exact k-NN over a dense corpus (pads N up to tile_n).
+    ``n_valid`` masks trailing rows of an already-padded corpus; rows this
+    wrapper pads on are always masked."""
     n = corpus.shape[0]
-    tile_n = min(tile_n, n) if n % min(tile_n, n) == 0 else tile_n
+    n_valid = n if n_valid is None else min(n_valid, n)
+    tile_n = min(tile_n, n)
     padded = (n + tile_n - 1) // tile_n * tile_n
     if padded != n:
         corpus = jnp.pad(corpus, ((0, padded - n), (0, 0)))
-    s, i = mips_topk_pallas(queries, corpus, k, tile_n=tile_n, n_valid=n,
-                            space=space, interpret=interpret)
+    s, i = mips_topk_pallas(queries, corpus, k, tile_n=tile_n,
+                            n_valid=n_valid, space=space, interpret=interpret)
     return TopK(s, i)
 
 

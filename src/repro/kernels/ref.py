@@ -14,7 +14,10 @@ def mips_topk_ref(queries: jax.Array, corpus: jax.Array, k: int,
     c = corpus.astype(jnp.float32)
     s = q @ c.T
     if space == "l2":
-        s = 2.0 * s - jnp.sum(q * q, axis=1, keepdims=True) - jnp.sum(c * c, axis=1)[None, :]
+        # einsum norms + grouping as in spaces.dense_scores so the oracle
+        # is bit-exact against both the kernel and the library path
+        s = -(jnp.einsum("bd,bd->b", q, q)[:, None]
+              + jnp.einsum("nd,nd->n", c, c)[None, :] - 2.0 * s)
     if n_valid is not None:
         mask = jnp.arange(c.shape[0])[None, :] < n_valid
         s = jnp.where(mask, s, jnp.finfo(jnp.float32).min)

@@ -38,10 +38,12 @@ class BatchingServer:
 
     ``pad_query`` produces the padding query (scored but discarded).
     ``window_s`` is the continuous-batching deadline (the batch closes
-    early when it fills)."""
+    early when it fills).  ``backend`` optionally declares the execution
+    backend behind ``fn`` (a :mod:`repro.core.backends` name or
+    instance) so it shows up in the underlying service's stats."""
 
     def __init__(self, fn: Callable, batch_size: int, pad_query,
-                 window_s: float = 0.005):
+                 window_s: float = 0.005, backend=None):
         self.fn = fn
         self.batch_size = batch_size
         self.pad_query = pad_query
@@ -51,7 +53,7 @@ class BatchingServer:
         self._service.register_runner(
             "default", lambda batch, _tokens: fn(batch),
             pad_query_repr=pad_query,
-            batch_size=batch_size, max_wait_s=window_s)
+            batch_size=batch_size, max_wait_s=window_s, backend=backend)
 
     def serve(self, queries: Sequence):
         """Serve a stream of single queries; returns per-query results."""

@@ -159,6 +159,7 @@ class ContinuousBatcher:
         max_wait_s: float = 0.01,
         max_queue: Optional[int] = None,
         overload: str = "block",
+        backend: Optional[str] = None,
         stats: Optional[ServingStats] = None,
         on_result: Optional[Callable[[Request, Any], None]] = None,
         time_fn: Callable[[], float] = time.monotonic,
@@ -173,6 +174,9 @@ class ContinuousBatcher:
         self.max_wait_s = max_wait_s
         self.max_queue = max_queue
         self.overload = overload
+        # execution-backend identity of the endpoint's runner: surfaced
+        # in stats snapshots and folded into this endpoint's cache keys
+        self.backend = backend
         self.stats = stats if stats is not None else ServingStats()
         self.on_result = on_result
         self._time_fn = time_fn
@@ -181,7 +185,7 @@ class ContinuousBatcher:
         self._thread = threading.Thread(
             target=self._loop, name=f"batcher-{name}", daemon=True)
         self.stats.register_endpoint(name, self._queue.qsize,
-                                     depth_limit=max_queue)
+                                     depth_limit=max_queue, backend=backend)
         self._thread.start()
 
     # -- client side --------------------------------------------------------

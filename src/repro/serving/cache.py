@@ -6,9 +6,15 @@ answers are bit-identical to freshly-served ones by construction.
 
 Keys quantize the query representation (round to ``decimals``) before
 hashing so that float jitter below the quantization step — e.g. the same
-query re-encoded on a different host — still hits.  The endpoint name is
-part of the key: the same vector against the dense and the fused space is
-two different questions.
+query re-encoded on a different host — still hits.  The endpoint name
+AND the endpoint's execution-backend identity are part of the key: the
+same vector against the dense and the fused space is two different
+questions, and two endpoints over the same corpus that differ only in
+``backend=`` must never alias each other's entries (backends are exact
+and parity-tested, but a cache that *assumes* that would mask any future
+divergence instead of surfacing it).  All key fields are length-framed
+before hashing, so no (endpoint, backend) pair can collide with another
+by sliding bytes across field boundaries.
 
 The cache sits *above* admission control: a hit never touches the
 endpoint's queue, so hot queries keep being answered even while the
@@ -28,14 +34,22 @@ import numpy as np
 __all__ = ["quantized_key", "QueryCache"]
 
 
-def quantized_key(endpoint: str, query: Any, decimals: int = 6) -> bytes:
-    """Stable digest of (endpoint, quantized query pytree).
+def _framed(h, data: bytes):
+    """Length-prefix a variable-size field so adjacent fields can't alias."""
+    h.update(len(data).to_bytes(8, "little"))
+    h.update(data)
+
+
+def quantized_key(endpoint: str, query: Any, decimals: int = 6,
+                  backend: Optional[str] = None) -> bytes:
+    """Stable digest of (endpoint, backend identity, quantized query).
 
     Float leaves are rounded to ``decimals``; integer leaves (token ids,
     sparse indices) are hashed exactly.  Leaf shapes and dtypes are folded
     in so e.g. f32[8] and f32[2,4] with equal bytes cannot collide."""
     h = hashlib.blake2b(digest_size=16)
-    h.update(endpoint.encode())
+    _framed(h, endpoint.encode())
+    _framed(h, (backend or "").encode())
     for leaf in jax.tree.leaves(query):
         a = np.asarray(leaf)
         if np.issubdtype(a.dtype, np.floating):
@@ -43,9 +57,9 @@ def quantized_key(endpoint: str, query: Any, decimals: int = 6) -> bytes:
             # crossing a rounding boundary still misses — inherent to
             # quantization, a perf loss only, never a wrong result
             a = np.round(a.astype(np.float64), decimals) + 0.0
-        h.update(str(a.dtype).encode())
-        h.update(np.asarray(a.shape, np.int64).tobytes())
-        h.update(np.ascontiguousarray(a).tobytes())
+        _framed(h, str(a.dtype).encode())
+        _framed(h, np.asarray(a.shape, np.int64).tobytes())
+        _framed(h, np.ascontiguousarray(a).tobytes())
     return h.digest()
 
 
@@ -60,8 +74,9 @@ class QueryCache:
         self._lock = threading.Lock()
         self._data: "collections.OrderedDict[bytes, Any]" = collections.OrderedDict()
 
-    def key(self, endpoint: str, query: Any) -> bytes:
-        return quantized_key(endpoint, query, self.decimals)
+    def key(self, endpoint: str, query: Any,
+            backend: Optional[str] = None) -> bytes:
+        return quantized_key(endpoint, query, self.decimals, backend=backend)
 
     def get(self, key: bytes) -> Optional[Any]:
         with self._lock:

@@ -23,6 +23,13 @@ are numpy pytrees (one row of the batched output), bit-identical to an
 offline ``pipeline.run`` on the same queries — verified in
 ``tests/test_serving.py`` and ``tests/test_sharded.py``.
 
+Execution backends are per endpoint: ``register_pipeline(...,
+backend=...)`` rebinds the pipeline's candidate stage onto the named
+:mod:`repro.core.backends` path (reference / streaming / pallas / auto),
+so the same corpus can be live behind several endpoints that differ only
+in how they execute — the backend identity shows up in stats snapshots
+and is part of the endpoint's cache keys.
+
 Admission control is per endpoint: ``max_queue`` bounds the endpoint's
 queue depth, ``overload`` picks the at-limit policy (``"block"`` —
 backpressure the submitter, ``"reject"`` — raise
@@ -39,12 +46,31 @@ from typing import Any, Callable, Iterable, List, Optional
 
 import jax
 
+from repro.core.backends import backend_identity
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.cache import QueryCache
 from repro.serving.router import Router
 from repro.serving.stats import ServiceSnapshot, ServingStats
 
 __all__ = ["RetrievalService"]
+
+
+def _pipeline_backend_label(pipeline) -> Optional[str]:
+    """Execution-backend identity of a pipeline's generator stage (None
+    when the pipeline has no backend seam — e.g. graph-ANN generators)."""
+    label = backend_identity(getattr(pipeline, "backend", None))
+    if label is not None:
+        return label
+    gens = getattr(pipeline, "generators", None)    # ShardedPipeline
+    if gens:
+        ids = sorted({lbl for g in gens
+                      if (lbl := backend_identity(getattr(g, "backend",
+                                                          None))) is not None})
+        if len(ids) == 1:
+            return ids[0]
+        if ids:
+            return "mixed(" + ",".join(ids) + ")"
+    return None
 
 
 class RetrievalService:
@@ -60,6 +86,11 @@ class RetrievalService:
         self.cache = (QueryCache(cache_size, cache_decimals)
                       if cache_size > 0 else None)
         self.router = Router()
+        # pipelines this service created itself (backend rebinds at
+        # registration) and therefore must close: a rebound
+        # ShardedPipeline owns a fresh host-parallel pool the caller
+        # never sees
+        self._owned_pipelines: List[Any] = []
         self._closed = False
 
     # -- endpoint registration ----------------------------------------------
@@ -68,13 +99,20 @@ class RetrievalService:
         pad_query_repr: Any, pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
+        backend: Optional[Any] = None,
     ) -> "RetrievalService":
+        """``backend`` (a name, identity string, or ExecutionBackend
+        instance) declares the execution path behind ``run_fn``: it is
+        surfaced in stats snapshots and keyed into this endpoint's cache
+        entries.  For opaque runners it is a label only — the runner is
+        not rewritten (use :meth:`register_pipeline` for that)."""
         if jit:
             run_fn = jax.jit(run_fn)
         batcher = ContinuousBatcher(
             name, run_fn, pad_query_repr, pad_q_tokens,
             batch_size=batch_size, max_wait_s=max_wait_s,
             max_queue=max_queue, overload=overload,
+            backend=backend_identity(backend),
             stats=self.stats, on_result=self._on_result,
             time_fn=self._time_fn)
         self.router.register(batcher)
@@ -85,16 +123,42 @@ class RetrievalService:
         pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
+        backend: Optional[Any] = None,
     ) -> "RetrievalService":
         """Serve a :class:`RetrievalPipeline` (or
         :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
-        batched ``run(query_repr, q_tokens)``) as endpoint ``name``."""
+        batched ``run(query_repr, q_tokens)``) as endpoint ``name``.
+
+        ``backend`` selects the execution path for the pipeline's
+        candidate stage (``"reference"`` / ``"streaming"`` / ``"pallas"``
+        / ``"auto"`` / an ExecutionBackend instance): the pipeline is
+        rebound via ``with_backend`` before registration, so one corpus
+        can be served as several endpoints differing only in backend.
+        The resolved identity lands in stats snapshots and cache keys.
+        A pipeline without a backend seam (no ``with_backend``) is
+        rejected here — use :meth:`register_runner` with ``backend=`` for
+        label-only declarations, so stats never claim a backend that is
+        not actually executing."""
+        if backend is not None:
+            if not hasattr(pipeline, "with_backend"):
+                raise TypeError(
+                    f"pipeline {type(pipeline).__name__} does not take an "
+                    "execution backend (no with_backend); register it via "
+                    "register_runner(backend=...) if you only want the "
+                    "label in stats/cache keys")
+            pipeline = pipeline.with_backend(backend)
+            if hasattr(pipeline, "close"):
+                self._owned_pipelines.append(pipeline)
+        label = _pipeline_backend_label(pipeline)
+        if label is None:
+            label = backend_identity(backend)
+
         def run_fn(query_repr, q_tokens):
             return pipeline.run(query_repr, q_tokens)
         return self.register_runner(
             name, run_fn, pad_query_repr, pad_q_tokens,
             batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
-            max_queue=max_queue, overload=overload)
+            max_queue=max_queue, overload=overload, backend=label)
 
     def endpoints(self):
         return self.router.endpoints()
@@ -117,7 +181,8 @@ class RetrievalService:
         self.stats.record_request(batcher.name)
         key = None
         if self.cache is not None:
-            key = self.cache.key(batcher.name, (query_repr, q_tokens))
+            key = self.cache.key(batcher.name, (query_repr, q_tokens),
+                                 backend=batcher.backend)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record_cache(True)
@@ -167,6 +232,10 @@ class RetrievalService:
         if not self._closed:
             self._closed = True
             self.router.close()
+            # batcher workers are joined by now, so no in-flight batch
+            # can still be using these
+            for pipeline in self._owned_pipelines:
+                pipeline.close()
 
     def __enter__(self) -> "RetrievalService":
         return self

@@ -15,7 +15,10 @@ process (and, with a mesh, across devices):
     brute force by default; graph-ANN or NAPP via ``generator_factory``),
     rebases local row ids by the shard offset, merges the K candidate
     lists with :func:`~repro.core.brute_force.merge_topk`, and applies the
-    usual reranker tail once over the merged global candidates.
+    usual reranker tail once over the merged global candidates.  The
+    per-shard execution path is pluggable: ``from_corpus(...,
+    backend=...)`` / :meth:`ShardedPipeline.with_backend` resolve a
+    :mod:`repro.core.backends` backend against each shard's slice.
 
 Bit-identity: contiguous shards concatenated in row order preserve
 ``lax.top_k``'s tie-break (lower slot == lower global row id), and every
@@ -40,6 +43,7 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 
+from repro.core.backends import resolve_backend
 from repro.core.brute_force import TopK, concat_topk, merge_topk
 from repro.core.pipeline import BruteForceGenerator, apply_rerankers
 
@@ -127,6 +131,7 @@ class ShardedPipeline:
     def from_corpus(
         cls, space, corpus, n_shards: int, *, ctx=None, axis: str = "corpus",
         generator_factory: Optional[Callable[[CorpusShard], Any]] = None,
+        backend=None,
         intermediate=None, final=None,
         cand_qty: int = 100, interm_qty: int = 50, final_qty: int = 10,
         host_parallel: bool = True,
@@ -138,11 +143,25 @@ class ShardedPipeline:
         per-shard ``GraphANNGenerator`` / ``NappGenerator`` for approximate
         search (merged results are then the union-of-shards approximation,
         not bit-identical to a global index).
+
+        ``backend`` selects the execution path of the default per-shard
+        generators (a :mod:`repro.core.backends` name, ``"auto"``, or
+        instance), resolved per shard against that shard's slice — a
+        backend that cannot serve the space falls back to reference shard
+        by shard.  Mutually exclusive with ``generator_factory`` (a custom
+        factory owns its generators' execution entirely).
         """
+        if backend is not None and generator_factory is not None:
+            raise ValueError(
+                "pass either backend= or generator_factory=, not both: a "
+                "custom factory owns its generators' execution path")
         shards = shard_corpus(corpus, n_shards, ctx=ctx, axis=axis)
         if generator_factory is None:
             def generator_factory(shard: CorpusShard):
-                return BruteForceGenerator(space, shard.corpus)
+                resolved = (None if backend is None else
+                            resolve_backend(backend, space, shard.corpus))
+                return BruteForceGenerator(space, shard.corpus,
+                                           backend=resolved)
         executor = (ThreadPoolExecutor(max_workers=n_shards,
                                        thread_name_prefix="shard")
                     if host_parallel and n_shards > 1 else None)
@@ -155,6 +174,27 @@ class ShardedPipeline:
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    def with_backend(self, backend) -> "ShardedPipeline":
+        """Same shards, different execution path: every per-shard generator
+        is rebound onto ``backend`` (resolved against its own slice, so an
+        incapable backend falls back to reference shard by shard).  The
+        rebound pipeline owns a fresh host-parallel pool — close it
+        separately.  Raises TypeError when a shard generator has no
+        backend seam (e.g. per-shard graph-ANN)."""
+        for g in self.generators:
+            if not hasattr(g, "with_backend"):
+                raise TypeError(
+                    f"shard generator {type(g).__name__} does not take an "
+                    "execution backend")
+        executor = (ThreadPoolExecutor(max_workers=self.n_shards,
+                                       thread_name_prefix="shard")
+                    if self.executor is not None else None)
+        return dataclasses.replace(
+            self,
+            generators=tuple(g.with_backend(backend)
+                             for g in self.generators),
+            executor=executor)
 
     # CandidateGenerator protocol: a ShardedPipeline can itself feed a
     # larger RetrievalPipeline as its (sharded) candidate stage.

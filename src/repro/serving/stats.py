@@ -14,6 +14,10 @@ can tell "p99 is high because we're queueing" from "p99 is fine because
 we're dropping load" — the e2e percentiles cover only *served* requests;
 rejected/shed requests never reach the latency reservoirs.
 
+Endpoints registered with an execution backend also surface its identity
+string in snapshots, so a latency regression can be attributed to the
+path (reference / streaming / pallas) actually serving the endpoint.
+
 All recorders are thread-safe: requests are admitted from client threads
 while batcher worker threads record execution.
 """
@@ -76,6 +80,9 @@ class EndpointSnapshot:
     depth_limit: Optional[int] = None   # None = unbounded queue
     rejected: int = 0               # submits refused under policy "reject"
     shed: int = 0                   # queued requests evicted ("shed_oldest")
+    # execution-backend identity serving this endpoint (None = opaque
+    # runner / no backend declared at registration)
+    backend: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,19 +128,23 @@ class ServingStats:
         self._endpoints: Dict[str, _EndpointStats] = {}
         self._depth_fns: Dict[str, Callable[[], int]] = {}
         self._depth_limits: Dict[str, int] = {}
+        self._backends: Dict[str, str] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
     # -- wiring -------------------------------------------------------------
     def register_endpoint(self, name: str,
                           depth_fn: Optional[Callable[[], int]] = None,
-                          depth_limit: Optional[int] = None):
+                          depth_limit: Optional[int] = None,
+                          backend: Optional[str] = None):
         with self._lock:
             self._endpoints.setdefault(name, _EndpointStats(name))
             if depth_fn is not None:
                 self._depth_fns[name] = depth_fn
             if depth_limit is not None:
                 self._depth_limits[name] = depth_limit
+            if backend is not None:
+                self._backends[name] = backend
 
     def _ep(self, name: str) -> _EndpointStats:
         return self._endpoints.setdefault(name, _EndpointStats(name))
@@ -206,6 +217,7 @@ class ServingStats:
                     depth_limit=self._depth_limits.get(name),
                     rejected=ep.overload["rejected"],
                     shed=ep.overload["shed"],
+                    backend=self._backends.get(name),
                 )
                 total += ep.n_requests
             return ServiceSnapshot(
