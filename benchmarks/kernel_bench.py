@@ -47,6 +47,7 @@ def run(csv_rows):
               f"(bit-identical) | TPU roofline expectation {tpu_us:.1f}us")
 
     from repro.core.sparse import from_dense
+    from repro.core.spaces import FusedSpace, FusedVectors
     rng = np.random.default_rng(0)
     b, n, v, nnz, dd = 8, 4096, 2048, 32, 64
     qd = rng.uniform(size=(b, v)) * (rng.uniform(size=(b, v)) > 0.95)
@@ -63,3 +64,27 @@ def run(csv_rows):
           f"TPU expectation {tpu_us:.1f}us")
     csv_rows.append((f"kernel/fused_score_B{b}N{n}", round(us, 1),
                      round(tpu_us, 2)))
+
+    # fused score+select in one pass, through the one topk seam: every
+    # backend must stay bit-identical on the mixed representation too
+    k = 16
+    space = FusedSpace(v, w_dense=0.6, w_sparse=0.4)
+    fq, fc = FusedVectors(qv, qs), FusedVectors(cv, cs)
+    outs, line = {}, []
+    for name in BACKENDS:
+        backend = make_backend(name, **({"tile_n": 1024}
+                                        if name != "reference" else {}))
+        us, out = time_call(
+            lambda q, c, be=backend: be.topk(space, q, c, k), fq, fc)
+        outs[name] = out
+        line.append(f"{name} {us:.0f}us")
+        csv_rows.append((f"kernel/fused_topk_{name}_B{b}N{n}",
+                         round(us, 1),
+                         round(tpu_us, 2) if name == "pallas" else None))
+    for name in BACKENDS[1:]:
+        assert np.array_equal(np.asarray(outs[name].scores),
+                              np.asarray(outs["reference"].scores)), name
+        assert np.array_equal(np.asarray(outs[name].indices),
+                              np.asarray(outs["reference"].indices)), name
+    print(f"fused_topk B{b} N{n} nnz{nnz} K{k}: {' | '.join(line)} "
+          f"(bit-identical) | TPU roofline expectation {tpu_us:.1f}us")

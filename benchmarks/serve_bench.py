@@ -14,11 +14,13 @@ returns bit-identical results.  The overload sweep floods a bounded
 admission queue (a deliberately slowed runner) under each policy and
 reports served/rejected/shed, the maximum observed queue depth, and p99
 under overload — the depth stays bounded instead of growing without
-limit.  The backend sweep serves the same corpus through each execution
-backend (reference / streaming / pallas-interpret), asserts bit-identical
-answers, and emits per-backend p50/p99 to ``BENCH_backends.json`` as a
-trajectory point (interpret-mode kernel wall-clock is a correctness
-trace, not TPU perf — see ``benchmarks/kernel_bench.py``).
+limit.  The backend sweep serves the same corpora — one dense, one fused
+(mixed dense+sparse, the paper's novel representation) — through each
+execution backend (reference / streaming / pallas-interpret), asserts
+bit-identical answers, and emits per-backend dense AND fused rows to
+``BENCH_backends.json`` as a trajectory point (interpret-mode kernel
+wall-clock is a correctness trace, not TPU perf — see
+``benchmarks/kernel_bench.py``).
 
     PYTHONPATH=src python benchmarks/serve_bench.py
 """
@@ -33,7 +35,8 @@ import jax
 import numpy as np
 
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
-from repro.core.spaces import DenseSpace
+from repro.core.sparse import from_dense
+from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors
 from repro.serving import (RetrievalService, ServiceOverloaded,
                            ShardedPipeline)
 
@@ -48,6 +51,9 @@ SHARD_COUNTS = (1, 2, 4)
 OVERLOAD_POLICIES = ("reject", "shed_oldest")
 OVERLOAD_DEPTH = 32       # admission-queue bound during the flood
 BACKENDS = ("reference", "streaming", "pallas")
+FUSED_VOCAB = 512
+FUSED_NNZ = 16
+FUSED_REQUESTS = 96       # the fused reference path is heavier per query
 
 
 def make_workload(n_requests: int, seed: int = 0) -> np.ndarray:
@@ -131,36 +137,35 @@ def run_shard_sweep(space, corpus, queries, warmup_queries, workload):
     return results
 
 
-def run_backend_sweep(pipe, queries, warmup_queries, workload,
-                      out_path: str):
-    """Same corpus, same workload, one endpoint per execution backend.
-
-    Answers must be bit-identical across backends (they are all exact);
-    per-backend p50/p99/qps land in ``out_path`` as one trajectory point.
-    """
+def _sweep_endpoint(pipe, pick_query, warmup, workload):
+    """One endpoint per execution backend over the same corpus+workload:
+    returns per-backend stats plus a spot-check result set that must be
+    bit-identical across backends (they are all exact)."""
     results, reference = {}, None
     check_n = 8
     for backend in BACKENDS:
         svc = RetrievalService(cache_size=0)
-        svc.register_pipeline("dense", pipe, queries[0],
+        svc.register_pipeline("ep", pipe, pick_query(0),
                               batch_size=16, max_wait_s=0.005,
                               backend=backend)
         with svc:
-            svc.retrieve([warmup_queries[i % warmup_queries.shape[0]]
-                          for i in range(16)], endpoint="dense")
+            svc.retrieve(warmup, endpoint="ep")
             svc.reset_stats()
             t0 = time.perf_counter()
-            futs = [svc.submit(queries[i], endpoint="dense")
+            futs = [svc.submit(pick_query(i), endpoint="ep")
                     for i in workload]
             for f in futs:
                 f.result()
             wall = time.perf_counter() - t0
             snap = svc.snapshot()
-            check = svc.retrieve([queries[i] for i in range(check_n)],
-                                 endpoint="dense")
-        ep = snap.endpoints["dense"]
+            check = svc.retrieve([pick_query(i) for i in range(check_n)],
+                                 endpoint="ep")
+        ep = snap.endpoints["ep"]
+        # each endpoint must really have RUN its requested backend — a
+        # silent capability fallback would publish rows that all
+        # measured the reference path
         assert ep.backend and ep.backend.startswith(backend), \
-            f"stats should surface the backend: {ep.backend!r}"
+            f"stats should surface the {backend} backend: {ep.backend!r}"
         results[backend] = {"identity": ep.backend,
                             "qps": len(futs) / wall,
                             "p50_ms": ep.e2e.p50_ms, "p99_ms": ep.e2e.p99_ms}
@@ -170,11 +175,52 @@ def run_backend_sweep(pipe, queries, warmup_queries, workload,
             for a, b in zip(reference, check):
                 assert np.array_equal(a.scores, b.scores), backend
                 assert np.array_equal(a.indices, b.indices), backend
+    return results
+
+
+def run_backend_sweep(pipe, queries, warmup_queries, workload,
+                      out_path: str):
+    """Dense AND fused corpora through every execution backend.
+
+    The dense endpoint exercises ``kernels/mips_topk.py``; the fused
+    endpoint exercises the one-pass fused score+select kernel
+    (``kernels/fused_topk.py``) against the reference and streaming
+    paths.  Answers must be bit-identical across backends; per-backend
+    p50/p99/qps for both spaces land in ``out_path`` as one trajectory
+    point.
+    """
+    warmup = [warmup_queries[i % warmup_queries.shape[0]] for i in range(16)]
+    dense_res = _sweep_endpoint(pipe, lambda i: queries[i % queries.shape[0]],
+                                warmup, workload)
+
+    # fused corpus: the paper's mixed dense+sparse representation
+    key = jax.random.PRNGKey(7)
+    kd, ks, kq, kqs = jax.random.split(key, 4)
+    fused_corpus = FusedVectors(
+        jax.random.normal(kd, (N_DOCS, DIM)),
+        from_dense(jax.nn.relu(jax.random.normal(
+            ks, (N_DOCS, FUSED_VOCAB))), FUSED_NNZ))
+    fused_queries = FusedVectors(
+        jax.random.normal(kq, (UNIQUE_QUERIES, DIM)),
+        from_dense(jax.nn.relu(jax.random.normal(
+            kqs, (UNIQUE_QUERIES, FUSED_VOCAB))), FUSED_NNZ))
+    fused_pipe = RetrievalPipeline(
+        BruteForceGenerator(FusedSpace(FUSED_VOCAB, w_dense=0.6,
+                                       w_sparse=0.4), fused_corpus),
+        cand_qty=100, final_qty=10)
+    pick = lambda i: jax.tree.map(lambda x: x[i % UNIQUE_QUERIES],
+                                  fused_queries)
+    fused_res = _sweep_endpoint(fused_pipe, pick,
+                                [pick(i) for i in range(16)],
+                                workload[:FUSED_REQUESTS])
     with open(out_path, "w") as f:
         json.dump({"bench": "serve_backends", "n_docs": N_DOCS, "dim": DIM,
                    "requests": len(workload), "platform": jax.default_backend(),
-                   "backends": results}, f, indent=2)
-    return results
+                   "backends": dense_res,
+                   "fused": {"vocab": FUSED_VOCAB, "nnz": FUSED_NNZ,
+                             "requests": FUSED_REQUESTS,
+                             "backends": fused_res}}, f, indent=2)
+    return dense_res, fused_res
 
 
 def run_overload_sweep(pipe, queries, n_requests: int):
@@ -281,14 +327,17 @@ def main():
               f"{r['p99_ms']:>8.2f}")
 
     # ---- backend sweep (bit-identical across backends, asserted inside) ----
-    back_res = run_backend_sweep(pipe, queries, warmup_queries, workload,
-                                 args.backends_out)
-    print(f"\nbackend sweep ({args.requests} requests, results bit-identical "
-          f"across backends; point written to {args.backends_out}):\n"
-          f"{'backend':>10} {'qps':>8} {'p50_ms':>8} {'p99_ms':>8}  identity")
-    for name, r in back_res.items():
-        print(f"{name:>10} {r['qps']:>8.1f} {r['p50_ms']:>8.2f} "
-              f"{r['p99_ms']:>8.2f}  {r['identity']}")
+    back_res, fused_res = run_backend_sweep(pipe, queries, warmup_queries,
+                                            workload, args.backends_out)
+    print(f"\nbackend sweep ({args.requests} requests dense / "
+          f"{FUSED_REQUESTS} fused, results bit-identical across backends; "
+          f"point written to {args.backends_out}):\n"
+          f"{'space':>6} {'backend':>10} {'qps':>8} {'p50_ms':>8} "
+          f"{'p99_ms':>8}  identity")
+    for space_name, rows in (("dense", back_res), ("fused", fused_res)):
+        for name, r in rows.items():
+            print(f"{space_name:>6} {name:>10} {r['qps']:>8.1f} "
+                  f"{r['p50_ms']:>8.2f} {r['p99_ms']:>8.2f}  {r['identity']}")
 
     # ---- overload sweep (bounded queue, counted drops) ---------------------
     over_res = run_overload_sweep(pipe, queries, args.requests)

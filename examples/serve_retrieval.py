@@ -1,18 +1,21 @@
 """End-to-end async serving driver: the paper's three spaces (dense,
-sparse, fused) as live endpoints of one :class:`RetrievalService` — plus
-the fused space a second time behind a 2-way sharded corpus, and the
-dense space a second time through the Pallas fused-kernel execution
-backend — hit by a multi-client load generator.
+sparse, fused) as live endpoints of one :class:`RetrievalService` — the
+fused space with mixing weights LEARNED from training data and served by
+the one-pass fused Pallas kernel (``backend="pallas"``), plus the fused
+space a second time behind a 2-way sharded corpus on the reference
+backend, and the dense space a second time through the Pallas MIPS
+kernel — hit by a multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
-projection, fused composite) -> train a LETOR fusion re-ranker -> stand
-up a RetrievalService with five endpoints + result cache (each endpoint
-with a bounded admission queue) -> N client threads stream requests
-(hot-query repeats exercise the cache) -> report per-endpoint latency
-percentiles, batch fill, overload counters, execution backend, cache
-hit-rate, and MRR@10 on the sparse funnel — and verify that the sharded
-fused endpoint answered bit-identically to the unsharded one and the
-pallas dense endpoint bit-identically to the reference one.
+projection, fused composite) -> train a LETOR fusion re-ranker AND the
+FusedSpace component weights -> stand up a RetrievalService with five
+endpoints + result cache (each endpoint with a bounded admission queue)
+-> N client threads stream requests (hot-query repeats exercise the
+cache) -> report per-endpoint latency percentiles, batch fill, overload
+counters, execution backend, cache hit-rate, and MRR@10 on the sparse
+funnel — and verify that the sharded reference-backed fused endpoint
+answered bit-identically to the kernel-backed one and the pallas dense
+endpoint bit-identically to the reference one.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -26,14 +29,15 @@ import numpy as np
 
 from repro.configs.paper_retrieval import smoke_config
 from repro.core import build_inverted_index
-from repro.core.fusion import coordinate_ascent, mrr
+from repro.core.fusion import coordinate_ascent, learn_fused_weights, mrr
 from repro.core.inverted_index import daat_topk
 from repro.core.pipeline import (BruteForceGenerator, LinearReranker,
                                  RetrievalPipeline)
 from repro.core.scorers import (CompositeExtractor, bm25_doc_vectors,
                                 build_forward_index, query_sparse_vectors)
 from repro.core.sparse import SparseVectors, densify
-from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors
+from repro.core.spaces import (DenseSpace, FusedSpace, FusedVectors,
+                               SparseSpace)
 from repro.data.pipeline import pad_tokens
 from repro.data.synthetic import make_corpus, qrels_to_labels
 from repro.serving import RetrievalService, ShardedPipeline
@@ -76,6 +80,29 @@ def build_service(rc, corpus):
           f"weights {np.round(np.asarray(w), 3)}")
     reranker = LinearReranker(comp, w)
 
+    # ---- learn the FusedSpace mixing weights from the same training data
+    # (the paper's "weights learned from training data" for the mixed
+    # representation): per-candidate dense and sparse component scores are
+    # the two LETOR features; the learned mix rides the backend seam into
+    # the fused Pallas kernel unchanged ------------------------------------
+    c_qty = cands.indices.shape[1]
+    nnz_q = q_sparse_all.indices.shape[-1]
+    dense_comp = jnp.einsum("qd,qcd->qc", q_dense_all[:train_n],
+                            doc_dense[cands.indices])
+    q_sp_tiled = SparseVectors(
+        jnp.broadcast_to(q_sparse_all.indices[:train_n, None, :],
+                         (train_n, c_qty, nnz_q)),
+        jnp.broadcast_to(q_sparse_all.values[:train_n, None, :],
+                         (train_n, c_qty, nnz_q)))
+    d_sp_cands = SparseVectors(doc_bm25.indices[cands.indices],
+                               doc_bm25.values[cands.indices])
+    sparse_comp = SparseSpace(v).score_pairs(q_sp_tiled, d_sp_cands)
+    w_dense, w_sparse, fused_m = learn_fused_weights(
+        dense_comp, sparse_comp, labels, jnp.isfinite(cands.scores),
+        n_rounds=3, n_restarts=2)
+    print(f"fused-space weights learned: MRR {fused_m:.3f}, "
+          f"w_dense {w_dense:.3f}, w_sparse {w_sparse:.3f}")
+
     # ---- the service: the paper's spaces as endpoints (dense served twice:
     # reference and pallas execution backends over one corpus) ---------------
     svc = RetrievalService(cache_size=2048)
@@ -102,19 +129,26 @@ def build_service(rc, corpus):
                           batch_size=16, max_wait_s=0.01,
                           backend="pallas")
 
-    fused_space = FusedSpace(v, w_dense=0.5, w_sparse=0.5)
+    # the mixed representation with the LEARNED mixing weights, scored and
+    # selected on-device by the fused Pallas kernel (interpret mode
+    # off-TPU): backend="pallas" is the whole difference, and the answers
+    # stay bit-identical to the reference-backed sharded endpoint below
+    fused_space = FusedSpace(v, w_dense=w_dense, w_sparse=w_sparse)
     fused_corpus = FusedVectors(doc_dense, doc_bm25)
     fused_pipe = RetrievalPipeline(
         BruteForceGenerator(fused_space, fused_corpus),
         cand_qty=rc.cand_qty, final_qty=10)
     pad_fused = FusedVectors(q_dense_all[0], pad_sp)
     svc.register_pipeline("fused", fused_pipe, pad_fused,
-                          batch_size=16, max_wait_s=0.01)
+                          batch_size=16, max_wait_s=0.01,
+                          backend="pallas")
 
-    # the same fused space served from a 2-way sharded corpus: one endpoint,
-    # per-shard search + global merge, bit-identical to "fused"; the bounded
-    # queue with "block" backpressures clients instead of dropping work
-    # (benchmarks/serve_bench.py exercises the reject/shed policies)
+    # the same fused space served from a 2-way sharded corpus on the
+    # reference backend: one endpoint, per-shard search + global merge,
+    # bit-identical to the kernel-backed "fused" (cross-backend AND
+    # cross-layout identity); the bounded queue with "block" backpressures
+    # clients instead of dropping work (benchmarks/serve_bench.py
+    # exercises the reject/shed policies)
     fused_sharded = ShardedPipeline.from_corpus(
         fused_space, fused_corpus, n_shards=2,
         cand_qty=rc.cand_qty, final_qty=10)

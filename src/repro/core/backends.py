@@ -14,11 +14,15 @@ with three registered implementations:
   * ``reference`` — one-shot ``exact_topk`` (full [B, N] score matrix);
     serves *every* space/corpus and is the semantic ground truth.
   * ``streaming`` — tiled ``streaming_topk`` (bounded memory, corpus
-    scanned in ``tile_n`` row tiles); dense ``[N, D]`` corpora only.
-  * ``pallas`` — the fused MIPS+top-k kernel
-    (:mod:`repro.kernels.mips_topk`): score tile + top-k merge in one
-    VMEM-resident loop.  Dense f32/bf16 corpora under ip/l2 only;
-    interpret mode off-TPU (same arithmetic, CPU speed).
+    scanned in ``tile_n`` row tiles); any row-major corpus pytree
+    (dense arrays, ``SparseVectors``, ``FusedVectors``).
+  * ``pallas`` — the fused score+top-k kernels: ``kernels.mips_topk``
+    for dense ip/l2 f32/bf16 corpora, ``kernels.fused_topk`` for
+    fused/sparse ip f32 corpora (the paper's mixed dense+sparse
+    representation scored AND selected on-device in one pass, learned
+    mixing weights baked into the launch).  Interpret mode off-TPU
+    (same arithmetic, CPU speed); ``tile_n=None`` auto-tunes the tile
+    from the roofline cost model.
 
 All three produce **bit-identical f32 scores and indices** for the
 spaces they share (dense ip/l2): the kernel's per-element arithmetic
@@ -30,8 +34,8 @@ breaks score ties toward the lower corpus row id
 ``"auto"``, or an instance, runs the capability check against the actual
 (space, corpus) pair, clamps tile sizes to legal values, and *falls back
 to* ``reference`` when the requested path cannot serve the space (e.g.
-the kernel asked to score a sparse or fused corpus) — flexibility never
-breaks, it just takes the library path.
+the kernel asked to score a cosine space or a non-f32 fused corpus) —
+flexibility never breaks, it just takes the library path.
 """
 
 from __future__ import annotations
@@ -44,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.brute_force import TopK, exact_topk, pad_corpus, streaming_topk
-from repro.core.spaces import DenseSpace
+from repro.core.sparse import SparseVectors
+from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors, SparseSpace
 
 __all__ = [
     "ExecutionBackend",
@@ -57,6 +62,7 @@ __all__ = [
     "resolve_backend",
     "backend_identity",
     "legal_tile",
+    "auto_tile_n",
     "AUTO_PALLAS_MIN_ROWS",
     "AUTO_STREAMING_MIN_ROWS",
 ]
@@ -94,11 +100,67 @@ def legal_tile(n_rows: int, requested: int) -> int:
     return max(1, min(requested, n_rows))
 
 
+def auto_tile_n(n_rows: int, *, b: int, k: int, bytes_per_row: float,
+                flops_per_row: float, resident_bytes: float = 0.0) -> int:
+    """Roofline-driven ``tile_n``: the legal tile minimising estimated
+    seconds *per corpus row* (``launch.roofline.topk_tile_seconds``)
+    among power-of-two lane multiples whose VMEM working set fits.
+
+    The working set per grid step is the resident operands
+    (``resident_bytes``: queries, the densified query table, the running
+    top-k) plus the streamed corpus tile double-buffered plus the
+    ``[B, tile]`` f32 score block.  Small tiles re-pay the ``B*K^2`` fold
+    term too often; large tiles blow the VMEM budget — the cost model
+    picks the knee instead of a fixed 1024/2048."""
+    from repro.launch.roofline import VMEM_BYTES, topk_tile_seconds
+
+    budget = VMEM_BYTES // 2          # leave headroom for compiler temps
+    best, best_cost = 128, None
+    tile = 128                        # lane-dim multiple (f32 MXU face)
+    while tile <= 16384:
+        fits = (resident_bytes + tile * (2 * bytes_per_row + 4 * b)
+                <= budget)
+        if fits:
+            cost = topk_tile_seconds(
+                tile, b=b, k=k, bytes_per_row=bytes_per_row,
+                flops_per_row=flops_per_row) / tile
+            # ties break toward the LARGER tile: per-row cost is flat
+            # once the HBM stream dominates, and fewer grid steps means
+            # less launch/DMA bookkeeping for the same roofline time
+            if best_cost is None or cost <= best_cost:
+                best, best_cost = tile, cost
+        tile *= 2
+    return legal_tile(n_rows, best)
+
+
 def _dense_rows(corpus) -> Optional[int]:
     """Row count if ``corpus`` is a dense [N, D] array, else None."""
     if isinstance(corpus, (jax.Array, np.ndarray)) and corpus.ndim == 2:
         return int(corpus.shape[0])
     return None
+
+
+def _rows(corpus) -> Optional[int]:
+    """Row count of any row-major corpus pytree (dense arrays,
+    ``SparseVectors``, ``FusedVectors``): every leaf must be an array
+    agreeing on ``shape[0]``.  None when the corpus has no such row axis
+    (e.g. an inverted index)."""
+    leaves = jax.tree.leaves(corpus)
+    if not leaves:
+        return None
+    n = None
+    for leaf in leaves:
+        if not isinstance(leaf, (jax.Array, np.ndarray)) or leaf.ndim < 1:
+            return None
+        if n is None:
+            n = int(leaf.shape[0])
+        elif int(leaf.shape[0]) != n:
+            return None
+    return n
+
+
+def _batch_rows(query_repr) -> int:
+    return int(jax.tree.leaves(query_repr)[0].shape[0])
 
 
 def _reference_tail(head: TopK, b: int, k: int, n_valid: int) -> TopK:
@@ -142,9 +204,12 @@ class ReferenceBackend:
 
 @dataclasses.dataclass(frozen=True)
 class StreamingBackend:
-    """Tiled exact top-k (``streaming_topk``): bounded memory, dense
-    corpora only.  Non-multiple corpus sizes are zero-padded up to the
-    tile (padding rows masked -inf via the valid count)."""
+    """Tiled exact top-k (``streaming_topk``): bounded memory, any
+    row-major corpus pytree (dense ``[N, D]`` arrays, ``SparseVectors``,
+    ``FusedVectors``) — each tile is scored through the space's own
+    ``score_batch``, so per-element arithmetic matches the reference path
+    exactly.  Non-multiple corpus sizes are zero-padded up to the tile
+    (padding rows masked -inf via the valid count)."""
 
     tile_n: int = 8192
     name = "streaming"
@@ -154,17 +219,18 @@ class StreamingBackend:
         return f"streaming(tile_n={self.tile_n})"
 
     def supports(self, space, corpus) -> Optional[str]:
-        if _dense_rows(corpus) is None:
-            return "streaming backend needs a dense [N, D] corpus array"
+        if _rows(corpus) is None:
+            return ("streaming backend needs a row-major corpus "
+                    "(array or pytree of [N, ...] arrays)")
         return None
 
     def topk(self, space, query_repr, corpus, k: int,
              n_valid: Optional[int] = None) -> TopK:
-        n = corpus.shape[0]
+        n = _rows(corpus)
         tile = legal_tile(n, self.tile_n)
         n_valid = n if n_valid is None else min(n_valid, n)
         k_eff = min(k, n_valid)     # the streaming heap's -inf init slots
-        b = query_repr.shape[0]     # must never displace reference's tail
+        b = _batch_rows(query_repr)  # must never displace reference's tail
         if n % tile:
             corpus, _ = pad_corpus(corpus, tile)
         head = (streaming_topk(space, query_repr, corpus, k_eff,
@@ -176,13 +242,22 @@ class StreamingBackend:
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
-    """The fused MIPS+top-k kernel (``kernels.mips_topk``).
+    """The fused score+top-k kernels: ``kernels.mips_topk`` for dense
+    spaces, ``kernels.fused_topk`` for fused/sparse spaces — mixed
+    dense+sparse corpora score AND select on-device in one pass, with the
+    space's learned ``w_dense``/``w_sparse`` weights baked into the
+    kernel launch.
+
+    ``tile_n=None`` (the default) auto-tunes the corpus tile per call
+    from the roofline cost model (:func:`auto_tile_n`) instead of a
+    fixed size — tiles are legal by construction and results are
+    bit-identical at any tile, so tuning never changes answers.
 
     ``interpret=None`` resolves per platform: compiled on TPU,
     interpret mode elsewhere (identical arithmetic, CPU speed — the
     parity tests and CI run exactly this path)."""
 
-    tile_n: int = 2048
+    tile_n: Optional[int] = None
     interpret: Optional[bool] = None
     name = "pallas"
 
@@ -191,7 +266,8 @@ class PallasBackend:
     @property
     def identity(self) -> str:
         interp = "auto" if self.interpret is None else self.interpret
-        return f"pallas(tile_n={self.tile_n},interpret={interp})"
+        tile = "auto" if self.tile_n is None else self.tile_n
+        return f"pallas(tile_n={tile},interpret={interp})"
 
     def _interpret(self) -> bool:
         if self.interpret is not None:
@@ -199,32 +275,115 @@ class PallasBackend:
         return jax.default_backend() != "tpu"
 
     def supports(self, space, corpus) -> Optional[str]:
-        if not isinstance(space, DenseSpace):
-            return (f"pallas kernel serves DenseSpace only, "
-                    f"not {type(space).__name__}")
-        if space.kind not in ("ip", "l2"):
-            return f"pallas kernel serves ip/l2, not {space.kind!r}"
-        if _dense_rows(corpus) is None:
-            return "pallas kernel needs a dense [N, D] corpus array"
-        if str(corpus.dtype) not in self._DTYPES:
-            return (f"pallas kernel serves {self._DTYPES} corpora, "
-                    f"not {corpus.dtype}")
-        return None
+        if isinstance(space, DenseSpace):
+            if space.kind not in ("ip", "l2"):
+                return f"pallas kernel serves ip/l2, not {space.kind!r}"
+            if _dense_rows(corpus) is None:
+                return "pallas kernel needs a dense [N, D] corpus array"
+            if str(corpus.dtype) not in self._DTYPES:
+                return (f"pallas kernel serves {self._DTYPES} corpora, "
+                        f"not {corpus.dtype}")
+            return None
+        if isinstance(space, SparseSpace):
+            if space.kind != "ip":
+                return ("pallas fused kernel serves sparse ip only, "
+                        f"not {space.kind!r}")
+            if not isinstance(corpus, SparseVectors):
+                return "pallas fused kernel needs a SparseVectors corpus"
+            if str(corpus.values.dtype) != "float32":
+                return ("pallas fused kernel serves f32 sparse values, "
+                        f"not {corpus.values.dtype}")
+            return None
+        if isinstance(space, FusedSpace):
+            if not isinstance(corpus, FusedVectors):
+                return "pallas fused kernel needs a FusedVectors corpus"
+            if corpus.dense is None and corpus.sparse is None:
+                return "fused corpus has no components"
+            if corpus.dense is not None:
+                # ip only: the l2 corpus-norm term constant-folds with
+                # different bits than the kernel computes at runtime when
+                # a jitted funnel closes over the corpus, so the
+                # bit-identity contract cannot be kept for fused l2
+                if space.dense_kind != "ip":
+                    return ("pallas fused kernel serves dense_kind 'ip', "
+                            f"not {space.dense_kind!r}")
+                if str(corpus.dense.dtype) != "float32":
+                    return ("pallas fused kernel serves f32 dense "
+                            f"components, not {corpus.dense.dtype}")
+            if (corpus.sparse is not None
+                    and str(corpus.sparse.values.dtype) != "float32"):
+                return ("pallas fused kernel serves f32 sparse values, "
+                        f"not {corpus.sparse.values.dtype}")
+            return None
+        return (f"pallas kernels serve dense/sparse/fused spaces, "
+                f"not {type(space).__name__}")
+
+    def _dense_tile(self, n: int, b: int, k: int, corpus) -> int:
+        if self.tile_n is not None:
+            return legal_tile(n, self.tile_n)
+        itemsize = corpus.dtype.itemsize
+        d = corpus.shape[1]
+        return auto_tile_n(n, b=b, k=k, bytes_per_row=d * itemsize,
+                           flops_per_row=2 * b * d,
+                           resident_bytes=b * (d + 2 * k) * 4)
+
+    def _fused_tile(self, n: int, b: int, k: int, vocab: int,
+                    nnz: int, dd: int) -> int:
+        if self.tile_n is not None:
+            return legal_tile(n, self.tile_n)
+        return auto_tile_n(
+            n, b=b, k=k,
+            bytes_per_row=nnz * 8 + dd * 4,     # COO (i32+f32) + dense f32
+            flops_per_row=2 * b * (nnz + dd),
+            resident_bytes=b * (vocab + 1 + dd + 2 * k) * 4)
 
     def topk(self, space, query_repr, corpus, k: int,
              n_valid: Optional[int] = None) -> TopK:
         from repro.kernels import ops   # lazy: kernels import core
 
-        n = corpus.shape[0]
+        if isinstance(space, DenseSpace):
+            n = corpus.shape[0]
+            n_valid = n if n_valid is None else min(n_valid, n)
+            k_eff = min(k, n_valid)   # the kernel masks with f32-min, not
+            b = query_repr.shape[0]   # -inf: keep its output to valid rows
+            head = (ops.mips_topk(
+                        query_repr, corpus, k_eff,
+                        tile_n=self._dense_tile(n, b, k_eff, corpus),
+                        space=space.kind, interpret=self._interpret(),
+                        n_valid=n_valid)
+                    if k_eff else _empty_topk(b))
+            return (head if k_eff == k
+                    else _reference_tail(head, b, k, n_valid))
+
+        # fused / sparse: the one-pass fused kernel.  Components mirror
+        # FusedSpace.score_batch — only those present on BOTH sides score;
+        # SparseSpace corpora ride the same kernel with the dense part
+        # absent and the sparse part unscaled.
+        if isinstance(space, SparseSpace):
+            q_sparse, c_sparse = query_repr, corpus
+            q_dense = c_dense = None
+            w_dense = w_sparse = None
+        else:
+            q_sparse, c_sparse = query_repr.sparse, corpus.sparse
+            q_dense, c_dense = query_repr.dense, corpus.dense
+            w_dense, w_sparse = space.w_dense, space.w_sparse
+        n = _rows(corpus)
         n_valid = n if n_valid is None else min(n_valid, n)
-        k_eff = min(k, n_valid)     # the kernel masks with f32-min, not
-        b = query_repr.shape[0]     # -inf: keep its output to valid rows
-        head = (ops.mips_topk(
-                    query_repr, corpus, k_eff,
-                    tile_n=legal_tile(n, self.tile_n),
-                    space=space.kind, interpret=self._interpret(),
-                    n_valid=n_valid)
-                if k_eff else _empty_topk(b))
+        k_eff = min(k, n_valid)
+        b = _batch_rows(query_repr)
+        if k_eff:
+            nnz = (c_sparse.indices.shape[-1]
+                   if c_sparse is not None and q_sparse is not None else 0)
+            dd = (c_dense.shape[-1]
+                  if c_dense is not None and q_dense is not None else 0)
+            tile = self._fused_tile(n, b, k_eff, space.vocab_size, nnz, dd)
+            head = ops.fused_topk(
+                q_sparse, q_dense, c_sparse, c_dense, space.vocab_size,
+                k_eff, w_dense=w_dense, w_sparse=w_sparse,
+                dense_kind=getattr(space, "dense_kind", "ip"),
+                tile_n=tile, n_valid=n_valid, interpret=self._interpret())
+        else:
+            head = _empty_topk(b)
         return (head if k_eff == k
                 else _reference_tail(head, b, k, n_valid))
 
@@ -262,19 +421,35 @@ register_backend("pallas", PallasBackend)
 
 
 def _auto(space, corpus, tile_n: Optional[int] = None) -> ExecutionBackend:
-    """Size/dtype/platform policy: kernel on TPU for large dense corpora,
-    streaming once the score matrix stops fitting comfortably, reference
-    otherwise (small corpora, sparse/fused spaces)."""
-    n = _dense_rows(corpus)
+    """Size/dtype/platform policy.
+
+    Dense corpora: the kernel on TPU for >= AUTO_PALLAS_MIN_ROWS rows,
+    streaming once the [B, N] score matrix stops fitting comfortably,
+    reference otherwise — off-TPU the library paths beat interpret mode.
+
+    Fused/sparse corpora: the fused kernel is the ONLY path that scores
+    and selects in one bounded pass (reference materialises a
+    [B, N, NNZ] gather), so large corpora take it on every platform
+    (interpret mode off-TPU — same arithmetic); streaming serves the
+    spaces the kernel refuses (e.g. sparse cosine); small corpora stay
+    on reference."""
+    n = _rows(corpus)
     if n is None:
         return ReferenceBackend()
     pallas = (PallasBackend(tile_n=tile_n) if tile_n else PallasBackend())
-    if (jax.default_backend() == "tpu" and n >= AUTO_PALLAS_MIN_ROWS
-            and pallas.supports(space, corpus) is None):
+    dense = _dense_rows(corpus) is not None
+    pallas_ok = pallas.supports(space, corpus) is None
+    if dense:
+        if (jax.default_backend() == "tpu" and n >= AUTO_PALLAS_MIN_ROWS
+                and pallas_ok):
+            return pallas
+    elif n >= AUTO_PALLAS_MIN_ROWS and pallas_ok:
         return pallas
     if n >= AUTO_STREAMING_MIN_ROWS:
-        return (StreamingBackend(tile_n=tile_n) if tile_n
-                else StreamingBackend())
+        streaming = (StreamingBackend(tile_n=tile_n) if tile_n
+                     else StreamingBackend())
+        if streaming.supports(space, corpus) is None:
+            return streaming
     return ReferenceBackend()
 
 

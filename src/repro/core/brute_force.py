@@ -42,15 +42,23 @@ class TopK(NamedTuple):
     indices: jax.Array  # i32[B, K] corpus row ids
 
 
-def pad_corpus(x: jax.Array, multiple: int, fill: float = 0.0) -> Tuple[jax.Array, int]:
+def pad_corpus(x, multiple: int, fill: float = 0.0) -> Tuple[jax.Array, int]:
     """Pad the corpus row axis up to a multiple (padding rows score -inf via
-    the valid-count mask threaded through scoring)."""
-    n = x.shape[0]
+    the valid-count mask threaded through scoring).  ``x`` may be any
+    row-major corpus pytree (dense array, ``SparseVectors``,
+    ``FusedVectors``): every leaf is padded along axis 0 with ``fill``
+    cast to its dtype — safe because scores of padded rows are always
+    masked by the valid count before selection."""
+    n = jax.tree.leaves(x)[0].shape[0]
     padded = (n + multiple - 1) // multiple * multiple
     if padded == n:
         return x, n
-    pad = [(0, padded - n)] + [(0, 0)] * (x.ndim - 1)
-    return jnp.pad(x, pad, constant_values=fill), n
+
+    def pad_leaf(leaf):
+        pad = [(0, padded - n)] + [(0, 0)] * (leaf.ndim - 1)
+        return jnp.pad(leaf, pad, constant_values=leaf.dtype.type(fill))
+
+    return jax.tree.map(pad_leaf, x), n
 
 
 def _mask_invalid(scores: jax.Array, base: int, n_valid: int) -> jax.Array:
@@ -73,25 +81,28 @@ def exact_topk(space, queries, corpus, k: int, n_valid: int | None = None) -> To
 def streaming_topk(
     space,
     queries,
-    corpus: jax.Array,
+    corpus,
     k: int,
     tile_n: int = 8192,
     n_valid: int | None = None,
 ) -> TopK:
-    """Scan corpus tiles keeping a running [B, k] heap.  ``corpus`` must be a
-    dense [N, D] array with N % tile_n == 0 (see :func:`pad_corpus`);
-    sparse/fused corpora use ``space.tile_n`` internally instead."""
-    n = corpus.shape[0]
+    """Scan corpus tiles keeping a running [B, k] heap.  ``corpus`` may be
+    any row-major pytree — a dense [N, D] array, ``SparseVectors``, or
+    ``FusedVectors`` — with N % tile_n == 0 (see :func:`pad_corpus`);
+    each tile is scored through ``space.score_batch``, so per-element
+    arithmetic matches the one-shot reference scan exactly."""
+    n = jax.tree.leaves(corpus)[0].shape[0]
     assert n % tile_n == 0, f"N={n} not a multiple of tile_n={tile_n}"
     n_tiles = n // tile_n
-    b = queries.shape[0]
+    b = jax.tree.leaves(queries)[0].shape[0]
     n_valid = n if n_valid is None else n_valid
 
     init = TopK(
         jnp.full((b, k), -jnp.inf, dtype=jnp.float32),
         jnp.zeros((b, k), dtype=jnp.int32),
     )
-    tiles = corpus.reshape(n_tiles, tile_n, *corpus.shape[1:])
+    tiles = jax.tree.map(
+        lambda x: x.reshape(n_tiles, tile_n, *x.shape[1:]), corpus)
 
     def body(heap: TopK, inp):
         t, tile = inp

@@ -38,6 +38,7 @@ __all__ = [
     "mrr",
     "ndcg_at_k",
     "coordinate_ascent",
+    "learn_fused_weights",
     "ObliviousTreeEnsemble",
     "lambdamart",
     "export_composite",
@@ -147,6 +148,30 @@ def coordinate_ascent(
         if float(cur) > float(best_m):
             best_w, best_m = w, cur
     return best_w, float(best_m)
+
+
+def learn_fused_weights(
+    dense_scores: jax.Array,      # f32[Q, C] dense-component candidate scores
+    sparse_scores: jax.Array,     # f32[Q, C] sparse-component candidate scores
+    labels: jax.Array,            # f32[Q, C]
+    valid: jax.Array,             # bool[Q, C]
+    metric: str = "mrr",
+    **kwargs,
+) -> Tuple[float, float, float]:
+    """Learn ``FusedSpace`` mixing weights from training data — the
+    paper's "weights learned from training data" for the mixed
+    dense+sparse representation (§3.2 scenario 1 + §3.3 LETOR).
+
+    The two component scores are the two features of a coordinate-ascent
+    run optimising the ranking metric directly; the resulting
+    L1-normalised weights drop into ``FusedSpace.with_weights`` and ride
+    the whole execution-backend seam unchanged — the fused Pallas kernel
+    bakes them into its launch (``core.backends.PallasBackend``).
+    Returns ``(w_dense, w_sparse, achieved_metric)``."""
+    feats = jnp.stack([dense_scores, sparse_scores], axis=-1)
+    w, achieved = coordinate_ascent(feats, labels, valid, metric=metric,
+                                    **kwargs)
+    return float(w[0]), float(w[1]), achieved
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ __all__ = [
     "FusedSpace",
     "FusedVectors",
     "dense_scores",
+    "weighted_mix",
 ]
 
 
@@ -107,6 +108,20 @@ class SparseSpace:
         return sp.sparse_inner_one_to_one(q, d, self.vocab_size)
 
 
+def weighted_mix(parts, weights) -> jax.Array:
+    """Mix component score arrays through ONE einsum (a dot over the
+    stacked component axis).  The obvious ``w_d * dense + w_s * sparse``
+    is an elementwise mul+add chain that XLA fuses into an FMA under jit
+    (the product loses its rounding step), so eager and jit contexts
+    disagree in the last bit; a dot's accumulation order is fixed inside
+    the op, making the mix bit-stable across eager/jit/scan — the same
+    trick as the einsum L2 norms in :func:`dense_scores`.  Every fused
+    scoring path (library, streaming tiles, the Pallas fused kernel) goes
+    through this exact arithmetic."""
+    return jnp.einsum("...c,c->...", jnp.stack(parts, axis=-1),
+                      jnp.asarray(weights, jnp.float32))
+
+
 class FusedVectors(NamedTuple):
     """The paper's mixed representation: one dense + one sparse component per
     item.  ``dense`` may be None for sparse-only items and vice versa."""
@@ -135,25 +150,27 @@ class FusedSpace:
         return dataclasses.replace(self, w_dense=w_dense, w_sparse=w_sparse)
 
     def score_batch(self, queries: FusedVectors, corpus: FusedVectors) -> jax.Array:
-        total = None
+        parts, weights = [], []
         if queries.dense is not None and corpus.dense is not None:
-            total = self.w_dense * dense_scores(self.dense_kind, queries.dense, corpus.dense)
+            parts.append(dense_scores(self.dense_kind, queries.dense, corpus.dense))
+            weights.append(self.w_dense)
         if queries.sparse is not None and corpus.sparse is not None:
-            s = SparseSpace(self.vocab_size, "ip", self.tile_n).score_batch(
+            parts.append(SparseSpace(self.vocab_size, "ip", self.tile_n).score_batch(
                 queries.sparse, corpus.sparse
-            )
-            total = self.w_sparse * s if total is None else total + self.w_sparse * s
-        if total is None:
+            ))
+            weights.append(self.w_sparse)
+        if not parts:
             raise ValueError("FusedSpace: no overlapping components to score")
-        return total
+        return weighted_mix(parts, weights)
 
     def score_pairs(self, queries: FusedVectors, docs: FusedVectors) -> jax.Array:
-        total = None
+        parts, weights = [], []
         if queries.dense is not None and docs.dense is not None:
-            total = self.w_dense * DenseSpace(self.dense_kind).score_pairs(queries.dense, docs.dense)
+            parts.append(DenseSpace(self.dense_kind).score_pairs(queries.dense, docs.dense))
+            weights.append(self.w_dense)
         if queries.sparse is not None and docs.sparse is not None:
-            s = SparseSpace(self.vocab_size).score_pairs(queries.sparse, docs.sparse)
-            total = self.w_sparse * s if total is None else total + self.w_sparse * s
-        if total is None:
+            parts.append(SparseSpace(self.vocab_size).score_pairs(queries.sparse, docs.sparse))
+            weights.append(self.w_sparse)
+        if not parts:
             raise ValueError("FusedSpace: no overlapping components to score")
-        return total
+        return weighted_mix(parts, weights)

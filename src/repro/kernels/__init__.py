@@ -3,6 +3,8 @@
 #   mips_topk.py     fused tiled MIPS + streaming top-k (VMEM-resident heap)
 #   sparse_dense.py  fused sparse+dense scoring (the paper's novel mixed
 #                    representation, one pass)
+#   fused_topk.py    sparse+dense scoring AND top-k selection in one pass —
+#                    the `pallas` execution backend for fused/sparse spaces
 # ops.py = jitted wrappers (library drop-ins); ref.py = pure-jnp oracles.
 # Validated in interpret mode (tests/test_kernels.py); TPU is the target
 # (BlockSpec tiling notes in each kernel's docstring).

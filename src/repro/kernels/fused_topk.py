@@ -1,0 +1,217 @@
+"""Fused-space Pallas kernel: mixed dense+sparse scoring AND top-k
+selection in one on-device pass — the paper's headline claim ("efficiently
+retrieve mixed dense and sparse representations with weights learned from
+training data") executed as a single corpus scan.
+
+Per grid step over corpus tiles:
+
+    score[b, n] = w_dense  * dense_kind(q_dense[b], c_dense[n])     (MXU)
+                + w_sparse * sum_k qd[b, c_idx[n, k]] * c_val[n, k] (VPU)
+    fold the [B, TILE_N] tile scores into the running top-k carried in
+    VMEM scratch (K rounds of max/argmax/mask, from kernels/mips_topk.py)
+
+so the [B, N] score matrix never exists anywhere — not in HBM (as in
+``kernels/sparse_dense.py`` + host ``lax.top_k``) and not on the host.
+This beats the two baselines the paper positions against: FAISS's fused
+scan+select is dense-only, Lucene's inverted scan is sparse-only; here
+the mixing happens *inside* the kernel, with the component weights as
+compile-time constants.
+
+Either component may be absent (static ``has_dense`` / ``has_sparse``):
+the same kernel serves pure-dense fused vectors, pure-sparse fused
+vectors, and plain ``SparseSpace`` corpora (a ``None`` weight leaves a
+single component unscaled, matching the library path's arithmetic
+exactly; mixing two components always takes explicit weights, as
+``FusedSpace`` does).
+
+Bit-identity contract (the one the dense backends already enforce): every
+per-element arithmetic order mirrors the library path —
+
+  * dense ip: one ``dot_general`` contraction, identical to
+    ``spaces.dense_scores``' ``q @ d.T``;
+  * dense l2: einsum norms + the exact ``-(q2 + c2 - 2s)`` grouping of
+    ``spaces.dense_scores``;
+  * sparse: gather the densified query table at the tile's padded-COO
+    indices and reduce over nnz with the same ``einsum("bnk,nk->bn")``
+    as ``core.sparse.sparse_inner_qbatch_docs``;
+  * mixing: ``w_dense * dense + w_sparse * sparse`` in the library's
+    association order (``FusedSpace.score_batch``);
+  * selection: ``_fold_topk`` breaks ties toward the lower corpus row id,
+    like ``lax.top_k``.
+
+So f32 scores and indices are bit-identical to the reference backend in
+every compilation context (eager / jit / scan) — swept in
+``tests/test_fused_backend.py``.
+
+TPU-target layout notes: TILE_N and the dense D should be multiples of
+128; the per-nnz-column gathers lower to dynamic-slice-per-lane on Mosaic
+(documented fallback: one-hot matmul per nnz slice over a blocked
+vocabulary); the ``[B, V+1]`` densified query table must fit VMEM next to
+the tile stream — ``core.backends.auto_tile_n`` budgets this from
+``launch/roofline.py``.  Interpret mode (CI, CPU) runs the identical
+arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mips_topk import NEG, _fold_topk
+
+
+def _kernel(*refs, k: int, tile_n: int, n_tiles: int, n_valid: int,
+            nnz: int, weighted: bool, dense_kind: str,
+            has_dense: bool, has_sparse: bool):
+    it = iter(refs)
+    w_ref = next(it) if weighted else None           # [1, C] mix weights
+    qd_ref = next(it) if has_sparse else None        # [B, V+1] densified
+    qdense_ref = next(it) if has_dense else None     # [B, Dd]
+    cidx_ref = next(it) if has_sparse else None      # [TILE_N, NNZ] i32
+    cval_ref = next(it) if has_sparse else None      # [TILE_N, NNZ]
+    cdense_ref = next(it) if has_dense else None     # [TILE_N, Dd]
+    out_s_ref, out_i_ref, s_scr, i_scr = it
+
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr, NEG)
+        i_scr[...] = jnp.zeros_like(i_scr)
+
+    parts = []
+    if has_dense:
+        q = qdense_ref[...].astype(jnp.float32)
+        c = cdense_ref[...].astype(jnp.float32)
+        dense = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        if dense_kind == "l2":
+            # exact grouping of spaces.dense_scores — see mips_topk.py
+            q2 = jnp.einsum("bd,bd->b", q, q)[:, None]
+            c2 = jnp.einsum("nd,nd->n", c, c)[None, :]
+            dense = -(q2 + c2 - 2.0 * dense)
+        parts.append(dense)
+    if has_sparse:
+        qd = qd_ref[...].astype(jnp.float32)
+        idx = cidx_ref[...]
+        val = cval_ref[...].astype(jnp.float32)
+        if nnz:
+            # one gather per static nnz column, reduced with the SAME
+            # einsum as sparse_inner_qbatch_docs so the k-accumulation
+            # order matches the library path element for element
+            picked = jnp.stack([qd[:, idx[:, j]] for j in range(nnz)],
+                               axis=-1)               # [B, TILE_N, NNZ]
+            sparse = jnp.einsum("bnk,nk->bn", picked, val)
+        else:
+            sparse = jnp.zeros((qd.shape[0], idx.shape[0]), jnp.float32)
+        parts.append(sparse)
+    if weighted:
+        # the library's exact mixing arithmetic (spaces.weighted_mix):
+        # ONE einsum over the stacked component axis — an elementwise
+        # w_d*dense + w_s*sparse would FMA-fuse under jit and drift a bit
+        total = jnp.einsum("...c,c->...", jnp.stack(parts, axis=-1),
+                           w_ref[...][0])
+    else:
+        total = parts[0]            # SparseSpace: single unscaled part
+
+    base = t * tile_n
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, total.shape, 1)
+    s = jnp.where(ids < n_valid, total, NEG)
+
+    cat_s = jnp.concatenate([s_scr[...], s], axis=1)
+    cat_i = jnp.concatenate([i_scr[...], ids], axis=1)
+    new_s, new_i = _fold_topk(cat_s, cat_i, k)
+    s_scr[...] = new_s
+    i_scr[...] = new_i
+
+    @pl.when(t == n_tiles - 1)
+    def _emit():
+        out_s_ref[...] = s_scr[...]
+        out_i_ref[...] = i_scr[...]
+
+
+def fused_topk_pallas(qdensified, q_dense, c_idx, c_val, c_dense, k: int,
+                      w_dense=None, w_sparse=None, tile_n: int = 1024,
+                      n_valid: int | None = None, dense_kind: str = "ip",
+                      interpret: bool = True):
+    """One-pass fused score + top-k: (scores [B, K], ids [B, K]) descending.
+
+    ``qdensified`` [B, V+1] (zero trash column last) + ``c_idx``/``c_val``
+    [N, NNZ] form the sparse component; ``q_dense`` [B, Dd] + ``c_dense``
+    [N, Dd] the dense one.  Pass ``None`` for an absent component (at
+    least one required).  ``w_dense``/``w_sparse``: static mixing weights;
+    ``None`` leaves a *single* component unscaled (SparseSpace
+    semantics); mixing two components requires both weights.
+    N must be a multiple of ``tile_n`` and ``k <= n_valid <= N`` — the
+    padding/clamping glue lives in ``ops.fused_topk``.
+    """
+    has_dense = c_dense is not None
+    has_sparse = c_idx is not None
+    if not (has_dense or has_sparse):
+        raise ValueError("fused_topk_pallas: no components to score")
+    weights = ([w_dense] if has_dense else []) + \
+              ([w_sparse] if has_sparse else [])
+    weighted = any(w is not None for w in weights)
+    if weighted and any(w is None for w in weights):
+        raise ValueError("give weights for all present components or none")
+    if not weighted and len(weights) > 1:
+        # no unscaled multi-component path exists in the library either:
+        # FusedSpace always mixes with weights, SparseSpace is one part
+        raise ValueError("mixing two components requires w_dense and "
+                         "w_sparse (pass 1.0 explicitly for an unweighted "
+                         "sum)")
+    n = (c_dense if has_dense else c_idx).shape[0]
+    b = (q_dense if has_dense else qdensified).shape[0]
+    assert n % tile_n == 0, (n, tile_n)
+    n_tiles = n // tile_n
+    n_valid = n if n_valid is None else n_valid
+    nnz = c_idx.shape[1] if has_sparse else 0
+
+    in_specs, operands = [], []
+    if weighted:
+        c_parts = len(weights)
+        in_specs.append(pl.BlockSpec((1, c_parts), lambda t: (0, 0)))
+        operands.append(jnp.asarray([weights], jnp.float32))
+    if has_sparse:
+        vp1 = qdensified.shape[1]
+        in_specs.append(pl.BlockSpec((b, vp1), lambda t: (0, 0)))
+        operands.append(qdensified)                  # query table resident
+    if has_dense:
+        dd = q_dense.shape[1]
+        in_specs.append(pl.BlockSpec((b, dd), lambda t: (0, 0)))
+        operands.append(q_dense)                     # queries resident
+    if has_sparse:
+        in_specs.append(pl.BlockSpec((tile_n, nnz), lambda t: (t, 0)))
+        in_specs.append(pl.BlockSpec((tile_n, nnz), lambda t: (t, 0)))
+        operands.extend([c_idx, c_val])              # COO tiles streamed
+    if has_dense:
+        in_specs.append(pl.BlockSpec((tile_n, dd), lambda t: (t, 0)))
+        operands.append(c_dense)                     # dense tiles streamed
+
+    kernel = functools.partial(
+        _kernel, k=k, tile_n=tile_n, n_tiles=n_tiles, n_valid=n_valid,
+        nnz=nnz, weighted=weighted, dense_kind=dense_kind,
+        has_dense=has_dense, has_sparse=has_sparse)
+    out_s, out_i = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((b, k), lambda t: (0, 0)),
+            pl.BlockSpec((b, k), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.VMEM((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out_s, out_i

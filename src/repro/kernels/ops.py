@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.brute_force import TopK
 from repro.core.sparse import SparseVectors, densify
+from repro.kernels.fused_topk import fused_topk_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
 from repro.kernels.sparse_dense import fused_score_pallas
 
@@ -61,11 +62,51 @@ def fused_scores(q_sparse: SparseVectors, q_dense: jax.Array,
     return out[:, :n]
 
 
-def fused_topk(q_sparse: SparseVectors, q_dense: jax.Array,
-               c_sparse: SparseVectors, c_dense: jax.Array,
-               vocab_size: int, k: int, w_dense: float = 1.0,
-               w_sparse: float = 1.0, interpret: bool = True) -> TopK:
-    s = fused_scores(q_sparse, q_dense, c_sparse, c_dense, vocab_size,
-                     w_dense, w_sparse, interpret=interpret)
-    vals, idx = jax.lax.top_k(s, k)
-    return TopK(vals, idx.astype(jnp.int32))
+@functools.partial(jax.jit,
+                   static_argnames=("vocab_size", "k", "w_dense", "w_sparse",
+                                    "dense_kind", "tile_n", "n_valid",
+                                    "interpret"))
+def fused_topk(q_sparse: SparseVectors | None, q_dense: jax.Array | None,
+               c_sparse: SparseVectors | None, c_dense: jax.Array | None,
+               vocab_size: int, k: int, w_dense: float | None = None,
+               w_sparse: float | None = None, dense_kind: str = "ip",
+               tile_n: int = 1024, n_valid: int | None = None,
+               interpret: bool = True) -> TopK:
+    """One-pass fused score + select (``fused_topk_pallas`` drop-in for
+    ``exact_topk`` over a ``FusedSpace``/``SparseSpace`` corpus), with the
+    padding glue: pads N up to ``tile_n`` (padded COO rows get the trash
+    id ``vocab_size``), densifies the sparse queries exactly as the
+    library path does, and masks rows past ``n_valid``.  ``None``
+    components are skipped; ``None`` weights leave a *single* component
+    unscaled (SparseSpace semantics) — mixing two components requires
+    both weights, pass 1.0 explicitly for an unweighted sum.  Requires
+    ``k <= n_valid`` (the backend layer clamps and re-pads the
+    degenerate tail — see ``core.backends``)."""
+    has_sparse = c_sparse is not None and q_sparse is not None
+    has_dense = c_dense is not None and q_dense is not None
+    if not (has_sparse or has_dense):
+        raise ValueError("fused_topk: no overlapping components to score")
+    n = (c_dense if has_dense else c_sparse.indices).shape[0]
+    n_valid = n if n_valid is None else min(n_valid, n)
+    tile = min(tile_n, n)
+    padded = (n + tile - 1) // tile * tile
+
+    qd = None
+    ci = cv = None
+    cd = c_dense if has_dense else None
+    qv = q_dense if has_dense else None
+    if has_sparse:
+        qd = densify(q_sparse, vocab_size)           # same call chain as
+        qd = jnp.pad(qd, ((0, 0), (0, 1)))           # sparse_inner_qbatch_docs
+        ci, cv = c_sparse.indices, c_sparse.values
+    if padded != n:
+        if has_sparse:
+            ci = jnp.pad(ci, ((0, padded - n), (0, 0)),
+                         constant_values=vocab_size)
+            cv = jnp.pad(cv, ((0, padded - n), (0, 0)))
+        if has_dense:
+            cd = jnp.pad(cd, ((0, padded - n), (0, 0)))
+    s, i = fused_topk_pallas(qd, qv, ci, cv, cd, k, w_dense=w_dense,
+                             w_sparse=w_sparse, tile_n=tile, n_valid=n_valid,
+                             dense_kind=dense_kind, interpret=interpret)
+    return TopK(s, i)

@@ -28,7 +28,46 @@ def mips_topk_ref(queries: jax.Array, corpus: jax.Array, k: int,
 def fused_score_ref(qdensified: jax.Array, q_dense: jax.Array,
                     c_idx: jax.Array, c_val: jax.Array, c_dense: jax.Array,
                     w_dense: float, w_sparse: float):
+    from repro.core.spaces import weighted_mix
+
     dense = q_dense.astype(jnp.float32) @ c_dense.astype(jnp.float32).T
     picked = qdensified.astype(jnp.float32)[:, c_idx]           # [B, N, NNZ]
     sparse = jnp.einsum("bnk,nk->bn", picked, c_val.astype(jnp.float32))
-    return w_dense * dense + w_sparse * sparse
+    return weighted_mix([dense, sparse], [w_dense, w_sparse])
+
+
+def fused_topk_ref(q_sparse, q_dense, c_sparse, c_dense, vocab_size: int,
+                   k: int, w_dense=None, w_sparse=None,
+                   dense_kind: str = "ip", n_valid: int | None = None):
+    """Oracle for ``fused_topk_pallas``: scores through the system's own
+    library paths (``spaces.dense_scores`` + ``sparse.
+    sparse_inner_qbatch_docs``, the exact arithmetic ``FusedSpace.
+    score_batch`` runs), selection via ``lax.top_k`` — so kernel tests pin
+    the library semantics, bit for bit.  ``None`` weights leave a
+    component unscaled (SparseSpace semantics); ``None`` components are
+    skipped."""
+    from repro.core import sparse as sp
+    from repro.core.spaces import dense_scores, weighted_mix
+
+    parts, weights = [], []
+    if q_dense is not None and c_dense is not None:
+        parts.append(dense_scores(dense_kind, q_dense.astype(jnp.float32),
+                                  c_dense.astype(jnp.float32)))
+        weights.append(w_dense)
+    if q_sparse is not None and c_sparse is not None:
+        parts.append(sp.sparse_inner_qbatch_docs(q_sparse, c_sparse,
+                                                 vocab_size))
+        weights.append(w_sparse)
+    if not parts:
+        raise ValueError("fused_topk_ref: no components to score")
+    if all(w is None for w in weights) and len(parts) > 1:
+        raise ValueError("mixing two components requires w_dense and "
+                         "w_sparse (pass 1.0 explicitly for an unweighted "
+                         "sum)")
+    total = (weighted_mix(parts, weights)
+             if any(w is not None for w in weights) else parts[0])
+    if n_valid is not None:
+        mask = jnp.arange(total.shape[1])[None, :] < n_valid
+        total = jnp.where(mask, total, -jnp.inf)
+    vals, idx = jax.lax.top_k(total, k)
+    return vals, idx.astype(jnp.int32)

@@ -11,16 +11,21 @@ multiply-accumulates.  One kernel pass replaces NMSLIB's two per-component
 scans + host-side mixing.
 
 TPU-target notes:
-  * the NNZ loop is static (unrolled): each step is a vectorised gather of
-    one index column [TILE_N] from the query table + FMA.  On Mosaic the
-    gather lowers to dynamic-slice-per-lane; the documented fallback is a
-    one-hot [TILE_N, V_block] matmul per NNZ slice (MXU-friendly when the
-    term vocabulary is blocked).
+  * the NNZ gathers are static (unrolled): each is a vectorised gather of
+    one index column [TILE_N] from the query table, reduced with the same
+    ``einsum("bnk,nk->bn")`` as ``core.sparse.sparse_inner_qbatch_docs``
+    and mixed through the same one-einsum weight mix as
+    ``spaces.weighted_mix`` — so f32 scores are bit-identical to
+    ``FusedSpace.score_batch``.  On Mosaic the gather lowers to
+    dynamic-slice-per-lane; the documented fallback is a one-hot
+    [TILE_N, V_block] matmul per NNZ slice (MXU-friendly when the term
+    vocabulary is blocked).
   * padding ids == V land in the table's zero column (V+1 wide), so no
     branch is needed.
 
 Validated against ``ref.fused_score_ref`` in interpret mode
-(tests/test_kernels.py) over shape/dtype/weight sweeps.
+(tests/test_kernels.py) over shape/dtype/weight sweeps; the one-pass
+score+select variant lives in ``fused_topk.py``.
 """
 
 from __future__ import annotations
@@ -32,8 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(qd_ref, qdense_ref, cidx_ref, cval_ref, cdense_ref, out_ref, *,
-            w_dense: float, w_sparse: float, nnz: int):
+def _kernel(w_ref, qd_ref, qdense_ref, cidx_ref, cval_ref, cdense_ref,
+            out_ref, *, nnz: int):
     qd = qd_ref[...].astype(jnp.float32)          # [B, V+1] densified queries
     qv = qdense_ref[...].astype(jnp.float32)      # [B, Dd]
     cd = cdense_ref[...].astype(jnp.float32)      # [TILE_N, Dd]
@@ -42,15 +47,15 @@ def _kernel(qd_ref, qdense_ref, cidx_ref, cval_ref, cdense_ref, out_ref, *,
 
     idx = cidx_ref[...]                           # [TILE_N, NNZ] i32
     val = cval_ref[...].astype(jnp.float32)       # [TILE_N, NNZ]
-    b = qd.shape[0]
-    tile_n = idx.shape[0]
-    sparse = jnp.zeros((b, tile_n), jnp.float32)
-    for j in range(nnz):                          # static unroll
-        col = idx[:, j]                           # [TILE_N]
-        picked = qd[:, col]                       # [B, TILE_N] gather
-        sparse = sparse + picked * val[None, :, j]
+    picked = jnp.stack([qd[:, idx[:, j]] for j in range(nnz)],
+                       axis=-1)                   # [B, TILE_N, NNZ]
+    sparse = jnp.einsum("bnk,nk->bn", picked, val)
 
-    out_ref[...] = w_dense * dense + w_sparse * sparse
+    # the library's exact mixing arithmetic (spaces.weighted_mix): one
+    # einsum over the stacked component axis — see fused_topk.py
+    out_ref[...] = jnp.einsum("...c,c->...",
+                              jnp.stack([dense, sparse], axis=-1),
+                              w_ref[...][0])
 
 
 def fused_score_pallas(qdensified: jax.Array, q_dense: jax.Array,
@@ -63,12 +68,13 @@ def fused_score_pallas(qdensified: jax.Array, q_dense: jax.Array,
     n, nnz = c_idx.shape
     dd = q_dense.shape[1]
     assert n % tile_n == 0, (n, tile_n)
-    kernel = functools.partial(_kernel, w_dense=w_dense, w_sparse=w_sparse,
-                               nnz=nnz)
+    kernel = functools.partial(_kernel, nnz=nnz)
+    weights = jnp.asarray([[w_dense, w_sparse]], jnp.float32)
     return pl.pallas_call(
         kernel,
         grid=(n // tile_n,),
         in_specs=[
+            pl.BlockSpec((1, 2), lambda t: (0, 0)),
             pl.BlockSpec((b, vp1), lambda t: (0, 0)),
             pl.BlockSpec((b, dd), lambda t: (0, 0)),
             pl.BlockSpec((tile_n, nnz), lambda t: (t, 0)),
@@ -78,4 +84,4 @@ def fused_score_pallas(qdensified: jax.Array, q_dense: jax.Array,
         out_specs=pl.BlockSpec((b, tile_n), lambda t: (0, t)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
         interpret=interpret,
-    )(qdensified, q_dense, c_idx, c_val, c_dense)
+    )(weights, qdensified, q_dense, c_idx, c_val, c_dense)

@@ -28,6 +28,26 @@ PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip
 ICI_BW = 50e9              # bytes/s / link (per direction)
 ICI_LINKS = 4              # links/chip in a 2D torus (16x16 pod slice)
+VMEM_BYTES = 16 * 2**20    # on-chip vector memory / core
+
+
+def topk_tile_seconds(tile_n: int, *, b: int, k: int, bytes_per_row: float,
+                      flops_per_row: float) -> float:
+    """Roofline seconds for ONE corpus tile of the fused scan+select
+    kernels (``kernels/mips_topk.py``, ``kernels/fused_topk.py``).
+
+    Per tile the kernel streams ``tile_n`` corpus rows from HBM
+    (``bytes_per_row`` each), scores them (``flops_per_row`` each — MXU
+    matmul and/or sparse gather-FMA), and folds the tile into the running
+    top-k with K rounds of max/argmax/mask over the ``[B, K + tile_n]``
+    concatenation (VPU compares).  The tile time is the max of the
+    compute and HBM-stream terms — the quantity ``tile_n`` auto-tuning
+    (``core.backends.auto_tile_n``) minimises per corpus row: small tiles
+    pay the ``B*K^2`` fold term once per few rows, large tiles stop
+    fitting the VMEM working set."""
+    compute = (flops_per_row * tile_n + b * k * (k + tile_n)) / PEAK_FLOPS
+    memory = (bytes_per_row * tile_n) / HBM_BW
+    return max(compute, memory)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

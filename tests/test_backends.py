@@ -139,23 +139,35 @@ class TestResolution:
                           StreamingBackend)
         assert isinstance(resolve_backend("pallas", space, c), PallasBackend)
 
-    def test_pallas_falls_back_for_sparse_space(self):
+    def test_pallas_serves_sparse_ip_refuses_cosine(self):
+        """PR 4: the fused kernel took over sparse-ip corpora; cosine
+        (which normalises inside score_batch) still falls back."""
         space, _q, c = _sparse_setup()
         assert isinstance(resolve_backend("pallas", space, c),
+                          PallasBackend)
+        cosine = SparseSpace(space.vocab_size, "cosine")
+        assert isinstance(resolve_backend("pallas", cosine, c),
                           ReferenceBackend)
 
-    def test_streaming_falls_back_for_fused_corpus(self):
+    def test_fused_corpus_serves_on_every_backend(self):
+        """PR 4: fused corpora stopped forcing the reference fallback —
+        streaming scans the pytree tiles, pallas runs the fused kernel."""
         sp_space, qs, cs = _sparse_setup()
         dq, dc = _mk(64, 16, 3)
         fused_c = FusedVectors(dc, cs)
         space = FusedSpace(sp_space.vocab_size)
         assert isinstance(resolve_backend("streaming", space, fused_c),
-                          ReferenceBackend)
+                          StreamingBackend)
         assert isinstance(resolve_backend("pallas", space, fused_c),
-                          ReferenceBackend)
+                          PallasBackend)
         # reference itself always serves
         assert isinstance(resolve_backend("reference", space, fused_c),
                           ReferenceBackend)
+        # the kernel's fused capability is ip-only: l2 fused falls back
+        assert isinstance(
+            resolve_backend("pallas", FusedSpace(sp_space.vocab_size,
+                                                 dense_kind="l2"), fused_c),
+            ReferenceBackend)
 
     def test_pallas_refuses_non_ip_l2_kinds(self):
         _q, c = _mk(64, 16, 2)
@@ -175,7 +187,12 @@ class TestResolution:
         be = StreamingBackend(tile_n=16)
         assert resolve_backend(be, DenseSpace("ip"), c) is be
         space, _qs, cs = _sparse_setup()
-        assert isinstance(resolve_backend(be, space, cs), ReferenceBackend)
+        assert resolve_backend(be, space, cs) is be   # PR 4: pytree tiles
+        # a corpus with no row-major array leaves still falls back
+        class OpaqueIndex:
+            pass
+        assert isinstance(resolve_backend(be, space, OpaqueIndex()),
+                          ReferenceBackend)
 
     def test_auto_small_dense_is_reference(self):
         q, c = _mk(64, 16, 2)

@@ -279,6 +279,75 @@ class TestServedSharded:
         np.testing.assert_array_equal(np.stack([r.indices for r in res]),
                                       np.asarray(off.indices))
 
+    @pytest.mark.fused
+    @pytest.mark.parametrize("backend", ["streaming", "pallas"])
+    def test_fused_sharded_backend_offline(self, fused_data, backend):
+        """PR 4: per-shard fused generators on the kernel/tiled paths —
+        the K-shard merge stays bit-identical to the unsharded reference
+        scan (shard slices are just smaller fused corpora)."""
+        corpus, queries = fused_data
+        space = FusedSpace(VOCAB, w_dense=0.6, w_sparse=0.4)
+        base = RetrievalPipeline(BruteForceGenerator(space, corpus),
+                                 cand_qty=40, final_qty=10)
+        with ShardedPipeline.from_corpus(space, corpus, 3, cand_qty=40,
+                                         final_qty=10,
+                                         backend=backend) as sharded:
+            from repro.core.backends import ReferenceBackend
+            assert not any(isinstance(g.backend, ReferenceBackend)
+                           for g in sharded.generators), \
+                "fused shards must resolve to the requested backend"
+            assert_topk_equal(sharded.run(queries), base.run(queries))
+
+    @pytest.mark.fused
+    def test_fused_sharded_pallas_endpoint_under_concurrent_load(
+            self, fused_data):
+        """Satellite acceptance: the fused endpoint on the pallas backend,
+        served K=2-sharded, answers bit-identically to the unsharded
+        reference endpoint while several client threads hammer both."""
+        corpus, queries = fused_data
+        space = FusedSpace(VOCAB, w_dense=0.5, w_sparse=0.5)
+        base = RetrievalPipeline(BruteForceGenerator(space, corpus),
+                                 cand_qty=30, final_qty=10)
+        sharded = ShardedPipeline.from_corpus(space, corpus, 2,
+                                              cand_qty=30, final_qty=10,
+                                              backend="pallas")
+        pad = jax.tree.map(lambda x: x[0], queries)
+        svc = RetrievalService(cache_size=0)
+        svc.register_pipeline("flat", base, pad,
+                              batch_size=3, max_wait_s=0.005,
+                              backend="reference")
+        svc.register_pipeline("sharded_pallas", sharded, pad,
+                              batch_size=3, max_wait_s=0.005)
+        n = queries.dense.shape[0]
+        results = {"flat": {}, "sharded_pallas": {}}
+        lock = threading.Lock()
+
+        def client(endpoint, order):
+            for i in order:
+                q = jax.tree.map(lambda x: x[i], queries)
+                r = svc.submit(q, endpoint=endpoint).result(timeout=30)
+                with lock:
+                    results[endpoint][i] = r
+
+        with svc:
+            threads = [threading.Thread(target=client, args=(ep, order))
+                       for ep in ("flat", "sharded_pallas")
+                       for order in (range(n), reversed(range(n)))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            snap = svc.snapshot()
+        sharded.close()
+        assert snap.endpoints["sharded_pallas"].backend.startswith("pallas(")
+        off = base.run(queries)
+        for i in range(n):
+            for ep in ("flat", "sharded_pallas"):
+                np.testing.assert_array_equal(
+                    results[ep][i].scores, np.asarray(off.scores)[i])
+                np.testing.assert_array_equal(
+                    results[ep][i].indices, np.asarray(off.indices)[i])
+
 
 class TestConcatTopk:
     def test_single_part_passthrough(self):
