@@ -52,3 +52,76 @@ def time_call(fn, *args, iters=3, warmup=1):
     for _ in range(iters):
         out = jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6, out  # us/call
+
+
+# ---------------------------------------------------------------------------
+# Margin-planted data for bf16 recall gates.  Same geometry as the test
+# suite's construction (tests/_precision.py): the true top-k is separated
+# from the background by a margin far above any bf16 rounding, so a
+# recall@k == 1.0 assertion is an invariant of the data — benches verify
+# this at runtime with fusion.require_bf16_margin.  numpy's generator,
+# not jax PRNG: data stays identical across jax pins.
+# ---------------------------------------------------------------------------
+
+def planted_margin_dense(n: int, d: int, b: int, k: int, seed: int = 0):
+    """(queries [B, D], corpus [N, D], planted_ids [K]) f32 with k
+    planted top rows — THE canonical construction; the test harness
+    (``tests/_precision.planted_margin_corpus``) delegates here so the
+    geometry the tests reason about and the geometry the benches run
+    can never drift apart.
+
+    Queries are ``unit_perp + 2*e0`` (``q·e0 == 2`` exactly — a power of
+    two bf16 rounds losslessly, and ``|q_perp| == 1``); background rows
+    are unit vectors ⟂ e0; planted row j is ``t_j·e0`` with
+    ``t_j = 1 + j/2k``, spread across the row range so tile/shard
+    boundaries cut through the planted set.  Then for ip the planted
+    scores are ``2·t_j ∈ [2, 3)`` vs background ``∈ [-1, 1]`` (margin
+    ≥ 1, within-set gaps ``1/k``), and for l2 the ``|c|² - 2q·c``
+    criterion is ``t_j² - 4t_j ∈ (-3.75, -3]`` planted vs ``≥ -1``
+    background (margin ≥ 2) — both orders of magnitude above bf16
+    perturbation at these scales."""
+    assert d >= 2 and k <= n
+    rng = np.random.default_rng(seed)
+
+    def unit_perp(rows):
+        x = rng.standard_normal((rows, d))
+        x[:, 0] = 0.0
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    q = unit_perp(b)
+    q[:, 0] = 2.0
+    c = unit_perp(n)
+    planted = (np.arange(k) * max(n // k, 1)) % n
+    c[planted] = 0.0
+    c[planted, 0] = 1.0 + np.arange(k) / (2.0 * k)
+    return (jnp.asarray(q, jnp.float32), jnp.asarray(c, jnp.float32),
+            jnp.asarray(planted, jnp.int32))
+
+
+def planted_margin_fused(n: int, v: int, nnz: int, dd: int, b: int, k: int,
+                         seed: int = 0):
+    """(fused_corpus, fused_queries) with a planted *sparse* margin:
+    queries carry term 0 with weight 8, the k planted rows carry it with
+    weights ``6 - j/4`` (≥ 2.25 for k ≤ 16; all other sparse values are
+    uniform ≤ 1, so term 0 survives the top-nnz export), and dense
+    components are bounded to |q·c| ≤ 1 — the planted sparse advantage
+    dominates any mixing weight the benches use."""
+    from repro.core.sparse import from_dense
+    from repro.core.spaces import FusedVectors
+
+    rng = np.random.default_rng(seed)
+    cd = rng.uniform(size=(n, v)) * (rng.uniform(size=(n, v)) > 0.95)
+    qd = rng.uniform(size=(b, v)) * (rng.uniform(size=(b, v)) > 0.9)
+    cd[:, 0] = 0.0
+    planted = (np.arange(k) * max(n // k, 1)) % n
+    cd[planted, 0] = 6.0 - np.arange(k) * 0.25
+    qd[:, 0] = 8.0
+    corpus = FusedVectors(
+        jnp.asarray(rng.uniform(-1.0, 1.0, (n, dd)) / np.sqrt(dd),
+                    jnp.float32),
+        from_dense(jnp.asarray(cd, jnp.float32), nnz))
+    queries = FusedVectors(
+        jnp.asarray(rng.uniform(-1.0, 1.0, (b, dd)) / np.sqrt(dd),
+                    jnp.float32),
+        from_dense(jnp.asarray(qd, jnp.float32), nnz))
+    return corpus, queries

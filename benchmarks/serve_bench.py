@@ -1,6 +1,6 @@
 """Serving latency/throughput frontier: batch-size x deadline x cache,
-plus shard-count, overload (admission-control), and execution-backend
-sweeps.
+plus shard-count, overload (admission-control), and execution-backend x
+corpus-dtype sweeps.
 
 Stands up a fresh :class:`RetrievalService` per configuration around a
 brute-force dense funnel, replays a repeated-query workload (hot-set
@@ -15,27 +15,40 @@ admission queue (a deliberately slowed runner) under each policy and
 reports served/rejected/shed, the maximum observed queue depth, and p99
 under overload — the depth stays bounded instead of growing without
 limit.  The backend sweep serves the same corpora — one dense, one fused
-(mixed dense+sparse, the paper's novel representation) — through each
-execution backend (reference / streaming / pallas-interpret), asserts
-bit-identical answers, and emits per-backend dense AND fused rows to
-``BENCH_backends.json`` as a trajectory point (interpret-mode kernel
+(mixed dense+sparse, the paper's novel representation), each at BOTH
+residency dtypes (f32 and bf16) — through each execution backend
+(reference / streaming / pallas-interpret), asserts the two-tier
+precision contract (bitwise within a dtype, recall@k == 1.0 across
+tiers), and emits one row per (space, dtype, backend) to
+``BENCH_backends.json`` as a trajectory point whose schema
+``benchmarks/validate_bench.py`` checks in CI (interpret-mode kernel
 wall-clock is a correctness trace, not TPU perf — see
 ``benchmarks/kernel_bench.py``).
 
-    PYTHONPATH=src python benchmarks/serve_bench.py
+    PYTHONPATH=src python benchmarks/serve_bench.py [--preset smoke]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+# script-mode shim: `python benchmarks/serve_bench.py` puts benchmarks/
+# itself on sys.path, not the repo root that `benchmarks.common` needs
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import planted_margin_dense, planted_margin_fused
+from repro.core.brute_force import exact_topk
+from repro.core.fusion import require_bf16_margin, topk_recall
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
-from repro.core.sparse import from_dense
+from repro.core.sparse import SparseVectors
 from repro.core.spaces import DenseSpace, FusedSpace, FusedVectors
 from repro.serving import (RetrievalService, ServiceOverloaded,
                            ShardedPipeline)
@@ -51,9 +64,18 @@ SHARD_COUNTS = (1, 2, 4)
 OVERLOAD_POLICIES = ("reject", "shed_oldest")
 OVERLOAD_DEPTH = 32       # admission-queue bound during the flood
 BACKENDS = ("reference", "streaming", "pallas")
+DTYPES = ("float32", "bfloat16")
+SPACES = ("dense", "fused")
+BENCH_SCHEMA = 2          # bumped when BENCH_backends.json's shape changes
 FUSED_VOCAB = 512
 FUSED_NNZ = 16
 FUSED_REQUESTS = 96       # the fused reference path is heavier per query
+
+# --preset smoke: the tiny CI preset — same code paths and assertions,
+# small enough for a benchmark smoke job on a shared runner
+SMOKE_OVERRIDES = dict(N_DOCS=1024, UNIQUE_QUERIES=64, BATCH_SIZES=(4, 16),
+                       DEADLINES_S=(0.002,), SHARD_COUNTS=(1, 2),
+                       FUSED_REQUESTS=32)
 
 
 def make_workload(n_requests: int, seed: int = 0) -> np.ndarray:
@@ -137,17 +159,21 @@ def run_shard_sweep(space, corpus, queries, warmup_queries, workload):
     return results
 
 
-def _sweep_endpoint(pipe, pick_query, warmup, workload):
-    """One endpoint per execution backend over the same corpus+workload:
-    returns per-backend stats plus a spot-check result set that must be
-    bit-identical across backends (they are all exact)."""
-    results, reference = {}, None
+def _sweep_endpoint(pipe, pick_query, warmup, workload, *,
+                    corpus_dtype="float32", f32_check=None):
+    """One endpoint per execution backend over the same corpus+workload
+    at one residency dtype: returns per-backend rows plus the spot-check
+    result set.  Within the dtype, results must be bit-identical across
+    backends (all paths are exact over the same stored values); when the
+    f32 tier's check set is supplied, the bf16 tier must additionally
+    reach recall == 1.0 against it (the two-tier precision contract)."""
+    rows, reference, check = [], None, None
     check_n = 8
     for backend in BACKENDS:
         svc = RetrievalService(cache_size=0)
         svc.register_pipeline("ep", pipe, pick_query(0),
                               batch_size=16, max_wait_s=0.005,
-                              backend=backend)
+                              backend=backend, corpus_dtype=corpus_dtype)
         with svc:
             svc.retrieve(warmup, endpoint="ep")
             svc.reset_stats()
@@ -161,66 +187,109 @@ def _sweep_endpoint(pipe, pick_query, warmup, workload):
             check = svc.retrieve([pick_query(i) for i in range(check_n)],
                                  endpoint="ep")
         ep = snap.endpoints["ep"]
-        # each endpoint must really have RUN its requested backend — a
-        # silent capability fallback would publish rows that all
-        # measured the reference path
+        # each endpoint must really have RUN its requested backend and
+        # dtype — a silent capability fallback would publish rows that
+        # all measured the reference path
         assert ep.backend and ep.backend.startswith(backend), \
             f"stats should surface the {backend} backend: {ep.backend!r}"
-        results[backend] = {"identity": ep.backend,
-                            "qps": len(futs) / wall,
-                            "p50_ms": ep.e2e.p50_ms, "p99_ms": ep.e2e.p99_ms}
+        assert ep.corpus_dtype == corpus_dtype, \
+            f"stats should surface dtype {corpus_dtype}: {ep.corpus_dtype!r}"
+        rows.append({"backend": backend, "dtype": corpus_dtype,
+                     "identity": ep.backend, "corpus_dtype": ep.corpus_dtype,
+                     "qps": len(futs) / wall,
+                     "p50_ms": ep.e2e.p50_ms, "p99_ms": ep.e2e.p99_ms})
         if reference is None:
             reference = check
         else:
             for a, b in zip(reference, check):
                 assert np.array_equal(a.scores, b.scores), backend
                 assert np.array_equal(a.indices, b.indices), backend
-    return results
+    if f32_check is not None:
+        rec = topk_recall(np.stack([np.asarray(r.indices) for r in f32_check]),
+                          np.stack([np.asarray(r.indices) for r in reference]))
+        assert rec == 1.0, \
+            f"{corpus_dtype} tier recall vs f32 oracle {rec} != 1.0"
+    return rows, reference
 
 
 def run_backend_sweep(pipe, queries, warmup_queries, workload,
                       out_path: str):
-    """Dense AND fused corpora through every execution backend.
+    """Dense AND fused corpora through every (execution backend x
+    residency dtype) cell.
 
-    The dense endpoint exercises ``kernels/mips_topk.py``; the fused
-    endpoint exercises the one-pass fused score+select kernel
+    The dense endpoints exercise ``kernels/mips_topk.py``; the fused
+    endpoints exercise the one-pass fused score+select kernel
     (``kernels/fused_topk.py``) against the reference and streaming
-    paths.  Answers must be bit-identical across backends; per-backend
-    p50/p99/qps for both spaces land in ``out_path`` as one trajectory
-    point.
-    """
+    paths.  Per (space, dtype, backend) qps/p50/p99 rows land in
+    ``out_path`` as one trajectory point, with the request matrix
+    recorded so ``benchmarks/validate_bench.py`` can verify every
+    requested cell actually ran."""
     warmup = [warmup_queries[i % warmup_queries.shape[0]] for i in range(16)]
-    dense_res = _sweep_endpoint(pipe, lambda i: queries[i % queries.shape[0]],
-                                warmup, workload)
+    rows = []
+    # recall-gate validity: the spot-check queries' f32 top-10 must be
+    # margin-separated from rank 11 beyond the bf16 perturbation bound
+    # (2^-8 x the absolute-valued score — the data is margin-planted,
+    # this verifies it stayed that way)
+    corpus = pipe.generator.corpus
+    pert = float(jnp.max(jnp.abs(queries[:8]) @ jnp.abs(corpus).T)) * 2.0**-8
+    require_bf16_margin(
+        np.asarray(exact_topk(pipe.generator.space, queries[:8],
+                              corpus, 11).scores),
+        pert_bound=pert)
+    f32_check = None
+    for dtype in DTYPES:
+        dtype_rows, check = _sweep_endpoint(
+            pipe, lambda i: queries[i % queries.shape[0]], warmup, workload,
+            corpus_dtype=dtype, f32_check=f32_check)
+        for r in dtype_rows:
+            rows.append({"space": "dense", **r})
+        if dtype == "float32":
+            f32_check = check
 
-    # fused corpus: the paper's mixed dense+sparse representation
-    key = jax.random.PRNGKey(7)
-    kd, ks, kq, kqs = jax.random.split(key, 4)
-    fused_corpus = FusedVectors(
-        jax.random.normal(kd, (N_DOCS, DIM)),
-        from_dense(jax.nn.relu(jax.random.normal(
-            ks, (N_DOCS, FUSED_VOCAB))), FUSED_NNZ))
-    fused_queries = FusedVectors(
-        jax.random.normal(kq, (UNIQUE_QUERIES, DIM)),
-        from_dense(jax.nn.relu(jax.random.normal(
-            kqs, (UNIQUE_QUERIES, FUSED_VOCAB))), FUSED_NNZ))
+    # fused corpus: the paper's mixed dense+sparse representation,
+    # margin-planted (benchmarks/common.py; numpy generator so the data
+    # is identical across jax pins)
+    fused_corpus, fused_queries = planted_margin_fused(
+        N_DOCS, FUSED_VOCAB, FUSED_NNZ, DIM, UNIQUE_QUERIES, 16, seed=7)
+    fused_space = FusedSpace(FUSED_VOCAB, w_dense=0.6, w_sparse=0.4)
     fused_pipe = RetrievalPipeline(
-        BruteForceGenerator(FusedSpace(FUSED_VOCAB, w_dense=0.6,
-                                       w_sparse=0.4), fused_corpus),
+        BruteForceGenerator(fused_space, fused_corpus),
         cand_qty=100, final_qty=10)
     pick = lambda i: jax.tree.map(lambda x: x[i % UNIQUE_QUERIES],
                                   fused_queries)
-    fused_res = _sweep_endpoint(fused_pipe, pick,
-                                [pick(i) for i in range(16)],
-                                workload[:FUSED_REQUESTS])
+    check_q = jax.tree.map(lambda x: x[:8], fused_queries)
+    abs_tree = lambda fv: FusedVectors(
+        jnp.abs(fv.dense), SparseVectors(fv.sparse.indices,
+                                         jnp.abs(fv.sparse.values)))
+    pert = float(jnp.max(fused_space.score_batch(
+        abs_tree(check_q), abs_tree(fused_corpus)))) * 2.0**-8
+    require_bf16_margin(
+        np.asarray(exact_topk(fused_space, check_q, fused_corpus,
+                              11).scores),
+        pert_bound=pert)
+    f32_check = None
+    for dtype in DTYPES:
+        dtype_rows, check = _sweep_endpoint(
+            fused_pipe, pick, [pick(i) for i in range(16)],
+            workload[:FUSED_REQUESTS], corpus_dtype=dtype,
+            f32_check=f32_check)
+        for r in dtype_rows:
+            rows.append({"space": "fused", **r})
+        if dtype == "float32":
+            f32_check = check
+
     with open(out_path, "w") as f:
-        json.dump({"bench": "serve_backends", "n_docs": N_DOCS, "dim": DIM,
-                   "requests": len(workload), "platform": jax.default_backend(),
-                   "backends": dense_res,
-                   "fused": {"vocab": FUSED_VOCAB, "nnz": FUSED_NNZ,
-                             "requests": FUSED_REQUESTS,
-                             "backends": fused_res}}, f, indent=2)
-    return dense_res, fused_res
+        json.dump({"bench": "serve_backends", "schema": BENCH_SCHEMA,
+                   "n_docs": N_DOCS, "dim": DIM,
+                   "requests": len(workload),
+                   "platform": jax.default_backend(),
+                   "fused_meta": {"vocab": FUSED_VOCAB, "nnz": FUSED_NNZ,
+                                  "requests": FUSED_REQUESTS},
+                   "requested": {"spaces": list(SPACES),
+                                 "dtypes": list(DTYPES),
+                                 "backends": list(BACKENDS)},
+                   "rows": rows}, f, indent=2)
+    return rows
 
 
 def run_overload_sweep(pipe, queries, n_requests: int):
@@ -272,15 +341,25 @@ def run_overload_sweep(pipe, queries, n_requests: int):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--preset", choices=("full", "smoke"), default="full",
+                    help="smoke = the tiny CI preset (same sweeps and "
+                         "assertions, small corpus/grid)")
     ap.add_argument("--backends-out", default="BENCH_backends.json",
                     help="where the backend-sweep trajectory point lands")
     args = ap.parse_args()
     if args.requests <= 0:
         ap.error("--requests must be positive")
+    if args.preset == "smoke":
+        globals().update(SMOKE_OVERRIDES)
+        args.requests = min(args.requests, 96)
 
-    corpus = jax.random.normal(jax.random.PRNGKey(0), (N_DOCS, DIM))
-    queries = jax.random.normal(jax.random.PRNGKey(1), (UNIQUE_QUERIES, DIM))
-    warmup_queries = jax.random.normal(jax.random.PRNGKey(2), (64, DIM))
+    # margin-planted (benchmarks/common.py) so the backend sweep's bf16
+    # recall gate is an invariant; numpy generator = identical data
+    # across jax pins.  Warmup queries are arbitrary (never asserted on).
+    queries, corpus, _planted = planted_margin_dense(N_DOCS, DIM,
+                                                     UNIQUE_QUERIES, 16)
+    warmup_queries = jnp.asarray(
+        np.random.default_rng(2).standard_normal((64, DIM)), jnp.float32)
     pipe = RetrievalPipeline(BruteForceGenerator(DenseSpace("ip"), corpus),
                              cand_qty=100, final_qty=10)
     workload = make_workload(args.requests)
@@ -313,8 +392,12 @@ def main():
     print(f"\ncache-on vs cache-off on the repeated-query workload: "
           f"mean qps {qps_on:.0f} vs {qps_off:.0f}, "
           f"p50 better on {p50_wins}/{len(cache_cmp)} configurations")
-    assert qps_on > qps_off, "cache should raise mean throughput"
-    assert p50_wins > len(cache_cmp) / 2, "cache should cut median latency"
+    if args.preset == "full":
+        # statistical claims need the full workload — the smoke preset's
+        # tiny request count is scheduling-noise dominated, and its job
+        # is exercising the sweeps + artifact schema, not the frontier
+        assert qps_on > qps_off, "cache should raise mean throughput"
+        assert p50_wins > len(cache_cmp) / 2, "cache should cut median latency"
 
     # ---- shard-count sweep (bit-identical across K, asserted inside) -------
     shard_res = run_shard_sweep(DenseSpace("ip"), corpus, queries,
@@ -326,18 +409,18 @@ def main():
         print(f"{k:>6} {r['qps']:>8.1f} {r['p50_ms']:>8.2f} "
               f"{r['p99_ms']:>8.2f}")
 
-    # ---- backend sweep (bit-identical across backends, asserted inside) ----
-    back_res, fused_res = run_backend_sweep(pipe, queries, warmup_queries,
-                                            workload, args.backends_out)
-    print(f"\nbackend sweep ({args.requests} requests dense / "
-          f"{FUSED_REQUESTS} fused, results bit-identical across backends; "
-          f"point written to {args.backends_out}):\n"
-          f"{'space':>6} {'backend':>10} {'qps':>8} {'p50_ms':>8} "
-          f"{'p99_ms':>8}  identity")
-    for space_name, rows in (("dense", back_res), ("fused", fused_res)):
-        for name, r in rows.items():
-            print(f"{space_name:>6} {name:>10} {r['qps']:>8.1f} "
-                  f"{r['p50_ms']:>8.2f} {r['p99_ms']:>8.2f}  {r['identity']}")
+    # ---- backend x dtype sweep (precision contract asserted inside) --------
+    rows = run_backend_sweep(pipe, queries, warmup_queries, workload,
+                             args.backends_out)
+    print(f"\nbackend x dtype sweep ({args.requests} requests dense / "
+          f"{FUSED_REQUESTS} fused; bitwise within dtype, recall@k=1.0 "
+          f"across tiers; point written to {args.backends_out}):\n"
+          f"{'space':>6} {'dtype':>9} {'backend':>10} {'qps':>8} "
+          f"{'p50_ms':>8} {'p99_ms':>8}  identity")
+    for r in rows:
+        print(f"{r['space']:>6} {r['dtype']:>9} {r['backend']:>10} "
+              f"{r['qps']:>8.1f} {r['p50_ms']:>8.2f} {r['p99_ms']:>8.2f}  "
+              f"{r['identity']}")
 
     # ---- overload sweep (bounded queue, counted drops) ---------------------
     over_res = run_overload_sweep(pipe, queries, args.requests)

@@ -1,0 +1,116 @@
+"""Schema validator for ``BENCH_backends.json`` — the CI benchmark smoke
+job's gate.
+
+A benchmark artifact is only evidence if it really measured what it
+claims: this checks that every *requested* (space, dtype, backend) cell
+produced exactly one row, that each row's endpoint identity actually
+starts with its requested backend (no silent capability fallback
+publishing reference numbers under a kernel's name), that each row's
+served ``corpus_dtype`` equals its requested dtype, and that the bf16
+tier is present (the precision contract's rows can't quietly drop out
+of the trajectory).
+
+Usable as a CLI (exit 1 + message on the first violation) and as a
+library (``validate(payload) -> list_of_errors``) so the test suite can
+guard the committed artifact against rot::
+
+    PYTHONPATH=src:. python -m benchmarks.validate_bench BENCH_backends.json
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import List
+
+EXPECTED_SCHEMA = 2
+TOP_LEVEL_KEYS = ("bench", "schema", "n_docs", "dim", "requests",
+                  "platform", "fused_meta", "requested", "rows")
+ROW_KEYS = ("space", "dtype", "backend", "identity", "corpus_dtype",
+            "qps", "p50_ms", "p99_ms")
+NUMERIC_ROW_KEYS = ("qps", "p50_ms", "p99_ms")
+
+
+def validate(payload: dict) -> List[str]:
+    """All schema violations in ``payload`` (empty list == valid)."""
+    errors = []
+    for key in TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["bench"] != "serve_backends":
+        errors.append(f"bench is {payload['bench']!r}, "
+                      "expected 'serve_backends'")
+    if payload["schema"] != EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != {EXPECTED_SCHEMA}")
+    requested = payload["requested"]
+    for axis in ("spaces", "dtypes", "backends"):
+        if not requested.get(axis):
+            errors.append(f"requested.{axis} missing or empty")
+    if errors:
+        return errors
+    if "bfloat16" not in requested["dtypes"]:
+        errors.append("requested.dtypes must include the bf16 tier")
+
+    seen = {}
+    for i, row in enumerate(payload["rows"]):
+        missing = [k for k in ROW_KEYS if k not in row]
+        if missing:
+            errors.append(f"rows[{i}] missing keys {missing}")
+            continue
+        cell = (row["space"], row["dtype"], row["backend"])
+        if cell in seen:
+            errors.append(f"rows[{i}] duplicates cell {cell}")
+        seen[cell] = row
+        if not str(row["identity"]).startswith(row["backend"]):
+            errors.append(
+                f"rows[{i}] identity {row['identity']!r} does not start "
+                f"with requested backend {row['backend']!r} — the row "
+                "measured a fallback path")
+        if row["corpus_dtype"] != row["dtype"]:
+            errors.append(
+                f"rows[{i}] served corpus_dtype {row['corpus_dtype']!r} "
+                f"!= requested dtype {row['dtype']!r}")
+        for k in NUMERIC_ROW_KEYS:
+            v = row[k]
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v <= 0:
+                errors.append(f"rows[{i}].{k} = {v!r} is not a positive "
+                              "finite number")
+
+    for space in requested["spaces"]:
+        for dtype in requested["dtypes"]:
+            for backend in requested["backends"]:
+                if (space, dtype, backend) not in seen:
+                    errors.append(
+                        f"requested cell ({space}, {dtype}, {backend}) "
+                        "never ran")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = argv[0] if argv else "BENCH_backends.json"
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"validate_bench: cannot read {path}: {exc}", file=sys.stderr)
+        return 1
+    errors = validate(payload)
+    if errors:
+        print(f"validate_bench: {path} FAILED "
+              f"({len(errors)} violation(s)):", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    n = len(payload["rows"])
+    print(f"validate_bench: {path} OK — {n} rows cover the full "
+          f"requested (space x dtype x backend) matrix, bf16 tier present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

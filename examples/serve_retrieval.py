@@ -3,19 +3,23 @@ sparse, fused) as live endpoints of one :class:`RetrievalService` — the
 fused space with mixing weights LEARNED from training data and served by
 the one-pass fused Pallas kernel (``backend="pallas"``), plus the fused
 space a second time behind a 2-way sharded corpus on the reference
-backend, and the dense space a second time through the Pallas MIPS
-kernel — hit by a multi-client load generator.
+backend, the dense space a second time through the Pallas MIPS kernel,
+and a third time from a bf16-resident corpus (``corpus_dtype=
+"bfloat16"``, half the HBM footprint, f32 score accumulation) — hit by
+a multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
 projection, fused composite) -> train a LETOR fusion re-ranker AND the
-FusedSpace component weights -> stand up a RetrievalService with five
+FusedSpace component weights -> stand up a RetrievalService with six
 endpoints + result cache (each endpoint with a bounded admission queue)
 -> N client threads stream requests (hot-query repeats exercise the
 cache) -> report per-endpoint latency percentiles, batch fill, overload
-counters, execution backend, cache hit-rate, and MRR@10 on the sparse
-funnel — and verify that the sharded reference-backed fused endpoint
-answered bit-identically to the kernel-backed one and the pallas dense
-endpoint bit-identically to the reference one.
+counters, execution backend + corpus dtype, cache hit-rate, and MRR@10
+on the sparse funnel — and verify that the sharded reference-backed
+fused endpoint answered bit-identically to the kernel-backed one, the
+pallas dense endpoint bit-identically to the reference one, and the
+bf16 dense endpoint recall-identically (the bounded-error precision
+tier) to the f32 one.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -29,7 +33,8 @@ import numpy as np
 
 from repro.configs.paper_retrieval import smoke_config
 from repro.core import build_inverted_index
-from repro.core.fusion import coordinate_ascent, learn_fused_weights, mrr
+from repro.core.fusion import (coordinate_ascent, learn_fused_weights, mrr,
+                               topk_recall)
 from repro.core.inverted_index import daat_topk
 from repro.core.pipeline import (BruteForceGenerator, LinearReranker,
                                  RetrievalPipeline)
@@ -129,6 +134,15 @@ def build_service(rc, corpus):
                           batch_size=16, max_wait_s=0.01,
                           backend="pallas")
 
+    # ... and a THIRD time from a bf16-resident corpus (half the HBM
+    # footprint, scores still accumulated in f32 — the bounded-error
+    # precision tier): corpus_dtype= is the whole difference; answers are
+    # recall-identical to "dense" (bitwise identity is an f32-tier
+    # property, by design)
+    svc.register_pipeline("dense_bf16", dense_pipe, q_dense_all[0],
+                          batch_size=16, max_wait_s=0.01,
+                          backend="pallas", corpus_dtype="bfloat16")
+
     # the mixed representation with the LEARNED mixing weights, scored and
     # selected on-device by the fused Pallas kernel (interpret mode
     # off-TPU): backend="pallas" is the whole difference, and the answers
@@ -165,10 +179,11 @@ def build_service(rc, corpus):
                              q_tokens_all[i]),
         "dense": lambda i: (q_dense_all[i], None),
         "dense_pallas": lambda i: (q_dense_all[i], None),
+        "dense_bf16": lambda i: (q_dense_all[i], None),
         "fused": fused_repr,
         "fused_sharded": fused_repr,
     }
-    return svc, fused_sharded, reprs, train_n
+    return svc, fused_sharded, reprs, train_n, doc_dense
 
 
 def run_load(svc, reprs, query_pool):
@@ -205,7 +220,7 @@ def main():
     rc = smoke_config()
     corpus = make_corpus(n_docs=rc.n_docs, n_queries=200,
                          vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
-    svc, sharded_pipe, reprs, train_n = build_service(rc, corpus)
+    svc, sharded_pipe, reprs, train_n, doc_dense = build_service(rc, corpus)
 
     with svc:
         # warm-up: one request per endpoint triggers each jit compile so
@@ -234,6 +249,37 @@ def main():
                 ra, rb = a.result(), b.result()
                 assert np.array_equal(ra.scores, rb.scores), (ep_a, ep_b)
                 assert np.array_equal(ra.indices, rb.indices), (ep_a, ep_b)
+
+        # bf16-vs-f32 spot check: the bounded-error precision tier can't
+        # be bitwise, so the contract is recall parity — the bf16
+        # endpoint must return exactly the same top-10 id SET as "dense"
+        # for every checked query.  On real data some queries have
+        # rank-10/11 near-ties SMALLER than the bf16 rounding bound;
+        # recall parity is only a well-defined expectation where the f32
+        # margin exceeds that bound, so check queries are selected by
+        # measured margin (and the guard re-asserts it loudly)
+        from repro.core.brute_force import exact_topk
+        from repro.core.fusion import require_bf16_margin
+        pool = [int(qi) for qi in query_pool]
+        q_pool = jnp.stack([reprs["dense"](i)[0] for i in pool])
+        oracle = np.asarray(
+            exact_topk(DenseSpace("ip"), q_pool, doc_dense, 11).scores)
+        pert = np.asarray(jnp.abs(q_pool) @ jnp.abs(doc_dense).T
+                          ).max(axis=1) * 2.0 ** -8
+        eligible = np.nonzero(oracle[:, 9] - oracle[:, 10] > 2 * pert)[0]
+        assert len(eligible) >= 8, "too few margin-separated queries"
+        sel = eligible[:8]
+        require_bf16_margin(oracle[sel], pert_bound=pert[sel])
+        check_bf16 = [pool[i] for i in sel]
+        futs_a = [svc.submit(*reprs["dense"](i), endpoint="dense")
+                  for i in check_bf16]
+        futs_b = [svc.submit(*reprs["dense_bf16"](i), endpoint="dense_bf16")
+                  for i in check_bf16]
+        bf16_recall = topk_recall(
+            np.stack([f.result().indices for f in futs_a]),
+            np.stack([f.result().indices for f in futs_b]))
+        assert bf16_recall == 1.0, \
+            f"dense_bf16 recall@10 vs dense = {bf16_recall}"
     sharded_pipe.close()
 
     # ---- quality on the sparse funnel (one result per unique query) --------
@@ -260,10 +306,12 @@ def main():
               f"batches (fill {ep.mean_batch_fill:.0%}, "
               f"close size/deadline {ep.closed_by_size}/{ep.closed_by_deadline}, "
               f"rejected/shed {ep.rejected}/{ep.shed}, "
-              f"backend {ep.backend or '-'})  "
+              f"backend {ep.backend or '-'}, "
+              f"dtype {ep.corpus_dtype or '-'})  "
               f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
     print("fused_sharded bit-identical to fused, dense_pallas "
-          "bit-identical to dense on spot-check queries")
+          "bit-identical to dense, dense_bf16 recall@10 == 1.0 vs dense "
+          "on spot-check queries")
     print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
     assert snap.cache_hits > 0

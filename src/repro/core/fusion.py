@@ -37,12 +37,74 @@ from repro.core.spaces import FusedVectors
 __all__ = [
     "mrr",
     "ndcg_at_k",
+    "topk_recall",
     "coordinate_ascent",
     "learn_fused_weights",
     "ObliviousTreeEnsemble",
     "lambdamart",
     "export_composite",
 ]
+
+
+def topk_recall(oracle_indices, got_indices) -> float:
+    """Mean per-row overlap of two top-k id lists (sets — order inside
+    the list does not count): the precision contract's cross-tier recall
+    metric, shared by the bf16 test harness (``tests/_precision.py``),
+    the benches, and the serving example so the enforced definition can
+    never drift between gates.  Host-side numpy on purpose — it compares
+    *results*, it is not part of any scored path."""
+    import numpy as np
+
+    oracle_indices = np.asarray(oracle_indices)
+    got_indices = np.asarray(got_indices)
+    assert oracle_indices.shape == got_indices.shape
+    if oracle_indices.ndim == 1:
+        oracle_indices = oracle_indices[None]
+        got_indices = got_indices[None]
+    k = oracle_indices.shape[-1]
+    hits = [len(set(o.tolist()) & set(g.tolist())) / k
+            for o, g in zip(oracle_indices.reshape(-1, k),
+                            got_indices.reshape(-1, k))]
+    return float(np.mean(hits))
+
+
+def require_bf16_margin(oracle_scores_kplus1, *, pert_bound,
+                        safety: float = 2.0):
+    """Validity guard for ``recall == 1.0`` gates over *generated* data
+    (benches, examples): given the f32 oracle's top-(k+1) scores
+    (descending columns), assert every row's rank-k -> rank-(k+1) gap
+    exceeds ``safety`` times the caller's bf16 perturbation bound — i.e.
+    the true top-k is separated from the field by more than bf16
+    rounding can move any score, so recall@k == 1.0 is an invariant of
+    the data, not a seed lottery.
+
+    ``pert_bound`` (scalar or per-row) is the rigorous *per-score* bound
+    the caller computes from its own operands: bf16 round-to-nearest
+    moves an element by at most half a ULP, and the bf16 ULP is up to
+    ``2**-7`` relative (7 explicit mantissa bits), so each element moves
+    by at most ``2**-8`` relative and an inner-product score by at most
+    ``2**-8 * sum_i |q_i| * |c_i|`` — i.e. ``2**-8`` times the score of
+    the absolute-valued data (use absolute component weights for a
+    fused space).  The default ``safety=2.0`` is NOT headroom: a rank
+    flip needs the gap to exceed the sum of TWO scores' perturbations
+    (rank k down, rank k+1 up), which is what the factor of two covers —
+    callers wanting real headroom should raise it.  When a data/shape
+    tweak erodes the margin, the gate fails loudly here instead of
+    flaking downstream.  (The test suite plants margins by
+    construction — ``tests/_precision.py``; this is the runtime
+    equivalent for data that is merely seeded.)"""
+    import numpy as np
+
+    s = np.asarray(oracle_scores_kplus1, np.float64)
+    assert s.ndim == 2 and s.shape[1] >= 2
+    gap = s[:, -2] - s[:, -1]
+    bound = np.broadcast_to(np.asarray(pert_bound, np.float64), gap.shape)
+    thin = gap <= safety * bound
+    assert not thin.any(), (
+        f"top-k margin {gap[thin].min():.3e} is within {safety}x the bf16 "
+        f"perturbation bound {bound[thin].max():.3e} — regenerate the "
+        "data; a bf16 recall gate over it would be a coin flip, not a "
+        "check")
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from repro.core.brute_force import TopK
 from repro.core import graph_ann, napp
 from repro.core.inverted_index import InvertedIndex, daat_topk
 from repro.core.scorers import CompositeExtractor
+from repro.core.spaces import canonical_dtype, cast_corpus, corpus_dtype
 
 __all__ = [
     "CandidateGenerator",
@@ -53,12 +54,31 @@ class BruteForceGenerator:
     :class:`~repro.core.backends.ExecutionBackend` instance, a name, or
     ``"auto"``); ``None`` keeps the historical one-shot reference path.
     Every backend is exact — they return bit-identical results on the
-    spaces they share, so swapping backends never changes answers."""
+    spaces they share, so swapping backends never changes answers.
+
+    ``corpus_dtype`` selects the corpus *residency* dtype
+    (:data:`~repro.core.spaces.CORPUS_DTYPES`): passing ``"bfloat16"``
+    casts the corpus once at construction — half the HBM footprint —
+    while scores keep accumulating in f32 (the precision contract in
+    ``core.spaces``).  ``None`` keeps the corpus as given; the field
+    then reports the observed residency dtype, so endpoint stats and
+    cache keys always see the dtype actually being scanned."""
 
     space: object
     corpus: object
     n_valid: Optional[int] = None
     backend: Optional[object] = None
+    corpus_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.corpus_dtype is not None:
+            dtype = canonical_dtype(self.corpus_dtype)
+            object.__setattr__(self, "corpus_dtype", dtype)
+            object.__setattr__(self, "corpus",
+                               cast_corpus(self.corpus, dtype))
+        else:
+            object.__setattr__(self, "corpus_dtype",
+                               corpus_dtype(self.corpus))
 
     def generate(self, query_repr, k: int) -> TopK:
         backend = self.backend
@@ -76,6 +96,15 @@ class BruteForceGenerator:
         return dataclasses.replace(
             self, backend=resolve_backend(backend, self.space, self.corpus))
 
+    def with_corpus_dtype(self, dtype) -> "BruteForceGenerator":
+        """Same space/funnel, different corpus residency dtype.  A bound
+        backend instance is re-resolved against the cast corpus so a
+        capability that depends on dtype can never go stale."""
+        replaced = dataclasses.replace(self, corpus_dtype=dtype)
+        if self.backend is not None and not isinstance(self.backend, str):
+            replaced = replaced.with_backend(self.backend)
+        return replaced
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamingGenerator:
@@ -87,6 +116,17 @@ class StreamingGenerator:
     corpus: jax.Array
     tile_n: int = 8192
     n_valid: Optional[int] = None
+    corpus_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.corpus_dtype is not None:
+            dtype = canonical_dtype(self.corpus_dtype)
+            object.__setattr__(self, "corpus_dtype", dtype)
+            object.__setattr__(self, "corpus",
+                               cast_corpus(self.corpus, dtype))
+        else:
+            object.__setattr__(self, "corpus_dtype",
+                               corpus_dtype(self.corpus))
 
     def generate(self, query_repr, k: int) -> TopK:
         return StreamingBackend(tile_n=self.tile_n).topk(
@@ -102,6 +142,9 @@ class StreamingGenerator:
             self.space, self.corpus, self.n_valid,
             backend=resolve_backend(backend, self.space, self.corpus,
                                     **kwargs))
+
+    def with_corpus_dtype(self, dtype) -> "StreamingGenerator":
+        return dataclasses.replace(self, corpus_dtype=dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +279,11 @@ class RetrievalPipeline:
         """The generator's execution backend, if it has one."""
         return getattr(self.generator, "backend", None)
 
+    @property
+    def corpus_dtype(self):
+        """The generator's corpus residency dtype, if it has one."""
+        return getattr(self.generator, "corpus_dtype", None)
+
     def with_backend(self, backend) -> "RetrievalPipeline":
         """Same funnel, different execution path under the generator.
         Raises TypeError for generators without a backend seam (graph-ANN,
@@ -247,16 +295,31 @@ class RetrievalPipeline:
         return dataclasses.replace(
             self, generator=self.generator.with_backend(backend))
 
+    def with_corpus_dtype(self, dtype) -> "RetrievalPipeline":
+        """Same funnel, different corpus residency dtype under the
+        generator (``"bfloat16"`` halves the resident corpus; scores
+        stay f32 — see the precision contract in ``core.spaces``).
+        Raises TypeError for generators without the dtype seam."""
+        if not hasattr(self.generator, "with_corpus_dtype"):
+            raise TypeError(
+                f"generator {type(self.generator).__name__} does not take "
+                "a corpus residency dtype")
+        return dataclasses.replace(
+            self, generator=self.generator.with_corpus_dtype(dtype))
+
     @classmethod
     def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":
         """Paper Fig. 4 experiment descriptor.  Recognised keys:
         candProv (name into context), backend (execution backend name for
+        the candidate stage), corpusDtype (corpus residency dtype for
         the candidate stage), extrType / extrTypeInterm (extractor
         configs), model / modelInterm (weight arrays or ensembles),
         candQty / intermQty / finalQty."""
         from repro.core.fusion import ObliviousTreeEnsemble
 
         gen = context[desc.get("candProv", "candidate_provider")]
+        if "corpusDtype" in desc:            # cast before backend
+            gen = gen.with_corpus_dtype(desc["corpusDtype"])   # resolution
         if "backend" in desc:
             gen = gen.with_backend(desc["backend"])
 

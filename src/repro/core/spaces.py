@@ -17,6 +17,17 @@ Supported spaces (paper §2 lists the same inventory):
   * fused sparse+dense inner product with adjustable component weights —
     the paper's NOVEL mixed representation (§3.2 export scenario 1); the
     composite-vector export (scenario 2) lives in ``core.fusion``.
+
+Precision contract: corpora may be resident in any of
+:data:`CORPUS_DTYPES` (f32, or bf16 for half the HBM footprint and
+roughly double the effective scan bandwidth), but **scores always
+accumulate and emit in f32**: every scoring path upcasts its operands
+before the first multiply.  Since an elementwise cast commutes with
+tiling, all execution backends (reference / streaming / pallas — whose
+kernels upcast per tile) stay bit-identical to each other *within* a
+corpus dtype; across dtypes the bf16 tier is held to a recall@k == 1.0
+vs-f32-oracle + bounded-ULP score-error contract instead
+(``tests/_precision.py``; docs/ARCHITECTURE.md "Precision contract").
 """
 
 from __future__ import annotations
@@ -36,11 +47,102 @@ __all__ = [
     "FusedVectors",
     "dense_scores",
     "weighted_mix",
+    "CORPUS_DTYPES",
+    "canonical_dtype",
+    "corpus_dtype",
+    "cast_corpus",
 ]
+
+# dtypes a corpus may be *stored* in; scores are always f32 (see module
+# docstring).  Order matters nowhere — membership is the contract.
+CORPUS_DTYPES = ("float32", "bfloat16")
+
+_DTYPE_ALIASES = {"f32": "float32", "fp32": "float32",
+                  "bf16": "bfloat16"}
+
+
+def canonical_dtype(dtype) -> str:
+    """Normalise a corpus-residency dtype spec (``"bf16"``,
+    ``jnp.bfloat16``, ``np.float32``, ...) to its canonical string, or
+    raise for dtypes outside the precision contract."""
+    if isinstance(dtype, str):
+        dtype = _DTYPE_ALIASES.get(dtype, dtype)
+    s = str(jnp.dtype(dtype))
+    if s not in CORPUS_DTYPES:
+        raise ValueError(
+            f"corpus dtype {dtype!r} not supported; the precision "
+            f"contract covers {CORPUS_DTYPES}")
+    return s
+
+
+def corpus_dtype(corpus) -> Optional[str]:
+    """Residency dtype of a corpus pytree: the dtype of its floating
+    leaves when they agree and fall under the contract, else None
+    (opaque index structures, mixed-precision pytrees)."""
+    dts = {str(leaf.dtype) for leaf in jax.tree.leaves(corpus)
+           if hasattr(leaf, "dtype")
+           and jnp.issubdtype(leaf.dtype, jnp.floating)}
+    if len(dts) == 1 and (d := dts.pop()) in CORPUS_DTYPES:
+        return d
+    return None
+
+
+def cast_corpus(corpus, dtype):
+    """Cast a corpus pytree's floating leaves to a residency ``dtype``
+    (integer leaves — COO term ids — are layout, not values, and stay
+    i32).  Casting is idempotent and safe to apply to slices: a cast
+    then a row-slice equals a row-slice then a cast, which is what keeps
+    sharded bf16 corpora bit-identical to unsharded ones.
+
+    Source dtypes must themselves be inside :data:`CORPUS_DTYPES`, and
+    only *narrowing* is allowed: widening (bf16 -> f32) is refused
+    because the rounding already happened — the result would carry
+    bf16-tier values under an f32 label — and an out-of-contract source
+    (f16, f64) is refused for the same reason: re-rounding or silently
+    relabeling it would claim tier guarantees the data does not
+    satisfy.  Rebuild from the original f32 corpus instead."""
+    target = jnp.dtype(canonical_dtype(dtype))
+
+    def cast_leaf(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+            if str(leaf.dtype) not in CORPUS_DTYPES:
+                raise ValueError(
+                    f"cast_corpus: source dtype {leaf.dtype} is outside "
+                    f"the precision contract {CORPUS_DTYPES}; casting it "
+                    f"to {target} would relabel out-of-contract data as "
+                    "a tier whose guarantees it does not satisfy")
+            if jnp.dtype(leaf.dtype).itemsize < target.itemsize:
+                raise ValueError(
+                    f"cast_corpus: widening {leaf.dtype} -> {target} is "
+                    "irreversible (the values were already rounded) and "
+                    "would mislabel bounded-error data as the "
+                    f"{target} tier; rebuild from the original corpus")
+            return jnp.asarray(leaf, target)
+        return leaf
+
+    return jax.tree.map(cast_leaf, corpus)
+
+
+def _accum_f32(x: jax.Array) -> jax.Array:
+    """Upcast sub-f32 operands (bf16/f16 residency) to f32 for
+    accumulation; leave f32 untouched and *wider* dtypes (f64 under
+    jax_enable_x64 — outside the contract) alone rather than silently
+    rounding them down."""
+    return (x.astype(jnp.float32)
+            if jnp.dtype(x.dtype).itemsize < 4 else x)
 
 
 def dense_scores(kind: str, q: jax.Array, d: jax.Array, p: float = 2.0) -> jax.Array:
-    """All-pairs dense scores [B, N] for query [B, D] vs docs [N, D]."""
+    """All-pairs dense scores [B, N] for query [B, D] vs docs [N, D].
+
+    Sub-f32 operands upcast to f32 before the first multiply (a no-op
+    for f32 inputs), so bf16-resident corpora accumulate in f32 — the
+    same arithmetic the Pallas kernels run after their per-tile
+    upcasts, which is what keeps all backends bit-identical per corpus
+    dtype."""
+    q = _accum_f32(q)
+    d = _accum_f32(d)
     if kind == "ip":
         return q @ d.T
     if kind == "cosine":
@@ -73,6 +175,8 @@ class DenseSpace:
 
     def score_pairs(self, queries: jax.Array, docs: jax.Array) -> jax.Array:
         """Aligned scores: queries [B, D] vs docs [B, D] -> [B]."""
+        queries = _accum_f32(queries)
+        docs = _accum_f32(docs)
         if self.kind == "ip":
             return jnp.sum(queries * docs, axis=-1)
         if self.kind == "cosine":

@@ -5,7 +5,9 @@ computes inner products with SIMD-accelerated merge loops.  JAX requires
 static shapes, so we use a *padded COO* layout:
 
     indices : i32[..., NNZ]   term ids, padding slots hold ``pad_id``
-    values  : f32[..., NNZ]   weights, padding slots hold 0.0
+    values  : f32/bf16[..., NNZ]   weights, padding slots hold 0.0
+                              (scores always accumulate in f32 — see the
+                              precision contract in ``core.spaces``)
 
 ``pad_id`` is by convention ``vocab_size`` (one past the last real id), so a
 scatter into a dense buffer of size ``vocab_size + 1`` sends padding into a
@@ -33,6 +35,14 @@ __all__ = [
     "l2_normalize_sparse",
     "topk_truncate",
 ]
+
+
+def _accum_f32(x: jax.Array) -> jax.Array:
+    """Upcast sub-f32 values (bf16/f16 residency) to f32 for
+    accumulation; f32 passes through and wider dtypes (outside the
+    contract) are left alone rather than silently rounded down."""
+    return (x.astype(jnp.float32)
+            if jnp.dtype(x.dtype).itemsize < 4 else x)
 
 
 class SparseVectors(NamedTuple):
@@ -107,6 +117,9 @@ def sparse_inner_one_to_one(q: SparseVectors, d: SparseVectors, vocab_size: int)
     """
 
     def one(qi, qv, di, dv):
+        # f32 accumulation regardless of storage dtype (precision
+        # contract — see spaces.py): bf16 values upcast before the mul
+        qv, dv = _accum_f32(qv), _accum_f32(dv)
         buf = jnp.zeros((vocab_size + 1,), dtype=qv.dtype).at[qi].add(qv)
         return jnp.sum(buf[di] * dv)
 
@@ -131,11 +144,15 @@ def sparse_inner_qbatch_docs(
     Cost: B·V scatter + B·N·NNZ gather-multiply — the latter maps to a
     vectorised gather on TPU and is exactly what the Pallas kernel tiles.
     """
-    qd = densify(q, vocab_size)                    # [B, V]
+    # densify in the storage dtype, THEN upcast the table: the Pallas
+    # fused kernel receives the same storage-dtype table and upcasts it
+    # whole, so this exact order keeps bf16 corpora bit-identical
+    # between the library and kernel paths (precision contract)
+    qd = _accum_f32(densify(q, vocab_size))          # [B, V]
     qd = jnp.pad(qd, ((0, 0), (0, 1)))             # trash slot for pad_id
     # [B, N, NNZ] gather — tiled variant below bounds the intermediate.
     picked = qd[:, docs.indices]                   # [B, N, NNZ]
-    return jnp.einsum("bnk,nk->bn", picked, docs.values)
+    return jnp.einsum("bnk,nk->bn", picked, _accum_f32(docs.values))
 
 
 def sparse_inner_tiled(
@@ -151,8 +168,8 @@ def sparse_inner_tiled(
     (callers pad — see ``brute_force.pad_corpus``)."""
     n = docs.indices.shape[0]
     assert n % tile_n == 0, f"doc count {n} not a multiple of tile {tile_n}"
-    qd = densify(q, vocab_size)
-    qd = jnp.pad(qd, ((0, 0), (0, 1)))
+    qd = _accum_f32(densify(q, vocab_size))           # f32 accumulation,
+    qd = jnp.pad(qd, ((0, 0), (0, 1)))                # any storage dtype
 
     di = docs.indices.reshape(n // tile_n, tile_n, -1)
     dv = docs.values.reshape(n // tile_n, tile_n, -1)
@@ -160,7 +177,7 @@ def sparse_inner_tiled(
     def body(carry, tile):
         ti, tv = tile
         picked = qd[:, ti]                          # [B, tile, NNZ]
-        return carry, jnp.einsum("bnk,nk->bn", picked, tv)
+        return carry, jnp.einsum("bnk,nk->bn", picked, _accum_f32(tv))
 
     _, out = jax.lax.scan(body, None, (di, dv))
     return jnp.moveaxis(out, 0, 1).reshape(q.indices.shape[0], n)

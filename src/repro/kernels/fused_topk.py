@@ -43,6 +43,15 @@ So f32 scores and indices are bit-identical to the reference backend in
 every compilation context (eager / jit / scan) — swept in
 ``tests/test_fused_backend.py``.
 
+Precision: operands upcast to f32 at the top of every tile (the
+``astype`` calls below), so bf16-resident corpora — half the COO/dense
+value stream — accumulate exactly like the library paths, which upcast
+at the same points (``core.sparse`` densifies in the storage dtype and
+THEN casts the table, mirroring this kernel's whole-table upcast).
+Within the bf16 tier results stay bit-identical across backends; across
+tiers the recall/ULP contract applies (``tests/test_bf16.py``, the
+``bf16`` CI marker; scores always emit f32).
+
 TPU-target layout notes: TILE_N and the dense D should be multiples of
 128; the per-nnz-column gathers lower to dynamic-slice-per-lane on Mosaic
 (documented fallback: one-hot matmul per nnz slice over a blocked

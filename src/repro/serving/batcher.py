@@ -160,6 +160,7 @@ class ContinuousBatcher:
         max_queue: Optional[int] = None,
         overload: str = "block",
         backend: Optional[str] = None,
+        corpus_dtype: Optional[str] = None,
         stats: Optional[ServingStats] = None,
         on_result: Optional[Callable[[Request, Any], None]] = None,
         time_fn: Callable[[], float] = time.monotonic,
@@ -174,9 +175,13 @@ class ContinuousBatcher:
         self.max_wait_s = max_wait_s
         self.max_queue = max_queue
         self.overload = overload
-        # execution-backend identity of the endpoint's runner: surfaced
-        # in stats snapshots and folded into this endpoint's cache keys
+        # execution-backend identity and corpus residency dtype of the
+        # endpoint's runner: surfaced in stats snapshots and folded into
+        # this endpoint's cache keys (two endpoints over one corpus that
+        # differ only in dtype are different precision tiers and must
+        # never alias)
         self.backend = backend
+        self.corpus_dtype = corpus_dtype
         self.stats = stats if stats is not None else ServingStats()
         self.on_result = on_result
         self._time_fn = time_fn
@@ -185,7 +190,8 @@ class ContinuousBatcher:
         self._thread = threading.Thread(
             target=self._loop, name=f"batcher-{name}", daemon=True)
         self.stats.register_endpoint(name, self._queue.qsize,
-                                     depth_limit=max_queue, backend=backend)
+                                     depth_limit=max_queue, backend=backend,
+                                     corpus_dtype=corpus_dtype)
         self._thread.start()
 
     # -- client side --------------------------------------------------------

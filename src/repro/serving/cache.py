@@ -7,7 +7,8 @@ answers are bit-identical to freshly-served ones by construction.
 Keys quantize the query representation (round to ``decimals``) before
 hashing so that float jitter below the quantization step — e.g. the same
 query re-encoded on a different host — still hits.  The endpoint name
-AND the endpoint's execution-backend identity are part of the key: the
+AND the endpoint's execution-backend identity AND its corpus residency
+dtype (the precision tier — f32 vs bf16) are part of the key: the
 same vector against the dense and the fused space is two different
 questions, and two endpoints over the same corpus that differ only in
 ``backend=`` must never alias each other's entries (backends are exact
@@ -41,15 +42,22 @@ def _framed(h, data: bytes):
 
 
 def quantized_key(endpoint: str, query: Any, decimals: int = 6,
-                  backend: Optional[str] = None) -> bytes:
-    """Stable digest of (endpoint, backend identity, quantized query).
+                  backend: Optional[str] = None,
+                  corpus_dtype: Optional[str] = None) -> bytes:
+    """Stable digest of (endpoint, backend identity, corpus residency
+    dtype, quantized query).
 
     Float leaves are rounded to ``decimals``; integer leaves (token ids,
     sparse indices) are hashed exactly.  Leaf shapes and dtypes are folded
-    in so e.g. f32[8] and f32[2,4] with equal bytes cannot collide."""
+    in so e.g. f32[8] and f32[2,4] with equal bytes cannot collide.
+    ``corpus_dtype`` is keyed exactly like ``backend``: a bf16 endpoint's
+    scores are a different precision tier than an f32 endpoint's over the
+    same corpus, and the two must never answer from each other's
+    entries."""
     h = hashlib.blake2b(digest_size=16)
     _framed(h, endpoint.encode())
     _framed(h, (backend or "").encode())
+    _framed(h, (corpus_dtype or "").encode())
     for leaf in jax.tree.leaves(query):
         a = np.asarray(leaf)
         if np.issubdtype(a.dtype, np.floating):
@@ -75,8 +83,10 @@ class QueryCache:
         self._data: "collections.OrderedDict[bytes, Any]" = collections.OrderedDict()
 
     def key(self, endpoint: str, query: Any,
-            backend: Optional[str] = None) -> bytes:
-        return quantized_key(endpoint, query, self.decimals, backend=backend)
+            backend: Optional[str] = None,
+            corpus_dtype: Optional[str] = None) -> bytes:
+        return quantized_key(endpoint, query, self.decimals,
+                             backend=backend, corpus_dtype=corpus_dtype)
 
     def get(self, key: bytes) -> Optional[Any]:
         with self._lock:

@@ -28,7 +28,12 @@ backend=...)`` rebinds the pipeline's candidate stage onto the named
 :mod:`repro.core.backends` path (reference / streaming / pallas / auto),
 so the same corpus can be live behind several endpoints that differ only
 in how they execute — the backend identity shows up in stats snapshots
-and is part of the endpoint's cache keys.
+and is part of the endpoint's cache keys.  Corpus residency dtype is per
+endpoint the same way: ``register_pipeline(..., corpus_dtype=
+"bfloat16")`` serves the funnel from a half-footprint bf16 corpus
+(scores stay f32 — the precision contract in ``core.spaces``), with the
+dtype surfaced in snapshots and keyed into the cache so precision tiers
+never alias.
 
 Admission control is per endpoint: ``max_queue`` bounds the endpoint's
 queue depth, ``overload`` picks the at-limit policy (``"block"`` —
@@ -73,6 +78,29 @@ def _pipeline_backend_label(pipeline) -> Optional[str]:
     return None
 
 
+def _pipeline_corpus_dtype(pipeline) -> Optional[str]:
+    """Corpus residency dtype behind a pipeline's generator stage (None
+    when there is no dtype seam or per-shard generators disagree).
+
+    A pipeline exposing ``corpus_dtype`` is trusted as-is — including a
+    None that means "my shards disagree" (``ShardedPipeline`` already
+    aggregates honestly).  The per-generator fallback, for duck-typed
+    sharded pipelines, treats a seamless generator (dtype None) next to
+    a typed one as *unknown*, never as the typed tier: claiming a
+    uniform precision tier the endpoint doesn't have would poison stats
+    attribution and cache keying."""
+    if hasattr(pipeline, "corpus_dtype"):
+        return pipeline.corpus_dtype
+    gens = getattr(pipeline, "generators", None)    # duck-typed sharded
+    if gens:
+        dts = {getattr(g, "corpus_dtype", None) for g in gens}
+        if len(dts) == 1 and (d := dts.pop()) is not None:
+            return d
+        if None not in dts and len(dts) > 1:
+            return "mixed(" + ",".join(sorted(dts)) + ")"
+    return None
+
+
 class RetrievalService:
     """Multi-endpoint async retrieval with continuous batching + caching.
 
@@ -99,13 +127,15 @@ class RetrievalService:
         pad_query_repr: Any, pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
-        backend: Optional[Any] = None,
+        backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
     ) -> "RetrievalService":
         """``backend`` (a name, identity string, or ExecutionBackend
-        instance) declares the execution path behind ``run_fn``: it is
-        surfaced in stats snapshots and keyed into this endpoint's cache
-        entries.  For opaque runners it is a label only — the runner is
-        not rewritten (use :meth:`register_pipeline` for that)."""
+        instance) declares the execution path behind ``run_fn``;
+        ``corpus_dtype`` declares its corpus residency dtype (the
+        precision tier).  Both are surfaced in stats snapshots and keyed
+        into this endpoint's cache entries.  For opaque runners they are
+        labels only — the runner is not rewritten (use
+        :meth:`register_pipeline` for that)."""
         if jit:
             run_fn = jax.jit(run_fn)
         batcher = ContinuousBatcher(
@@ -113,6 +143,7 @@ class RetrievalService:
             batch_size=batch_size, max_wait_s=max_wait_s,
             max_queue=max_queue, overload=overload,
             backend=backend_identity(backend),
+            corpus_dtype=corpus_dtype,
             stats=self.stats, on_result=self._on_result,
             time_fn=self._time_fn)
         self.router.register(batcher)
@@ -123,7 +154,7 @@ class RetrievalService:
         pad_q_tokens: Optional[Any] = None, *,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
-        backend: Optional[Any] = None,
+        backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
     ) -> "RetrievalService":
         """Serve a :class:`RetrievalPipeline` (or
         :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
@@ -134,11 +165,25 @@ class RetrievalService:
         / ``"auto"`` / an ExecutionBackend instance): the pipeline is
         rebound via ``with_backend`` before registration, so one corpus
         can be served as several endpoints differing only in backend.
-        The resolved identity lands in stats snapshots and cache keys.
-        A pipeline without a backend seam (no ``with_backend``) is
-        rejected here — use :meth:`register_runner` with ``backend=`` for
-        label-only declarations, so stats never claim a backend that is
-        not actually executing."""
+        ``corpus_dtype`` rebinds the corpus residency dtype the same way
+        (via ``with_corpus_dtype``, applied *before* backend resolution
+        so capability checks see the dtype that will actually be
+        scanned): ``corpus_dtype="bfloat16"`` serves the same funnel
+        from a half-footprint corpus on the bounded-error precision tier.
+        The resolved identity and dtype land in stats snapshots and
+        cache keys.  A pipeline without the corresponding seam (no
+        ``with_backend`` / ``with_corpus_dtype``) is rejected here — use
+        :meth:`register_runner` for label-only declarations, so stats
+        never claim a path that is not actually executing."""
+        original = pipeline
+        if corpus_dtype is not None:
+            if not hasattr(pipeline, "with_corpus_dtype"):
+                raise TypeError(
+                    f"pipeline {type(pipeline).__name__} does not take a "
+                    "corpus residency dtype (no with_corpus_dtype); "
+                    "register it via register_runner(corpus_dtype=...) if "
+                    "you only want the label in stats/cache keys")
+            pipeline = pipeline.with_corpus_dtype(corpus_dtype)
         if backend is not None:
             if not hasattr(pipeline, "with_backend"):
                 raise TypeError(
@@ -146,19 +191,29 @@ class RetrievalService:
                     "execution backend (no with_backend); register it via "
                     "register_runner(backend=...) if you only want the "
                     "label in stats/cache keys")
+            intermediate = pipeline
             pipeline = pipeline.with_backend(backend)
-            if hasattr(pipeline, "close"):
-                self._owned_pipelines.append(pipeline)
+            # a dtype rebind of a sharded pipeline owns a worker pool the
+            # backend rebind replaced: retire the intermediate now
+            if intermediate is not original and hasattr(intermediate,
+                                                        "close"):
+                intermediate.close()
+        if pipeline is not original and hasattr(pipeline, "close"):
+            self._owned_pipelines.append(pipeline)
         label = _pipeline_backend_label(pipeline)
         if label is None:
             label = backend_identity(backend)
+        dtype_label = _pipeline_corpus_dtype(pipeline)
+        if dtype_label is None:
+            dtype_label = corpus_dtype
 
         def run_fn(query_repr, q_tokens):
             return pipeline.run(query_repr, q_tokens)
         return self.register_runner(
             name, run_fn, pad_query_repr, pad_q_tokens,
             batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
-            max_queue=max_queue, overload=overload, backend=label)
+            max_queue=max_queue, overload=overload, backend=label,
+            corpus_dtype=dtype_label)
 
     def endpoints(self):
         return self.router.endpoints()
@@ -182,7 +237,8 @@ class RetrievalService:
         key = None
         if self.cache is not None:
             key = self.cache.key(batcher.name, (query_repr, q_tokens),
-                                 backend=batcher.backend)
+                                 backend=batcher.backend,
+                                 corpus_dtype=batcher.corpus_dtype)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record_cache(True)

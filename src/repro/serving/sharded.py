@@ -46,6 +46,7 @@ import jax
 from repro.core.backends import resolve_backend
 from repro.core.brute_force import TopK, concat_topk, merge_topk
 from repro.core.pipeline import BruteForceGenerator, apply_rerankers
+from repro.core.spaces import canonical_dtype, cast_corpus
 
 __all__ = ["CorpusShard", "shard_corpus", "ShardedPipeline"]
 
@@ -131,7 +132,7 @@ class ShardedPipeline:
     def from_corpus(
         cls, space, corpus, n_shards: int, *, ctx=None, axis: str = "corpus",
         generator_factory: Optional[Callable[[CorpusShard], Any]] = None,
-        backend=None,
+        backend=None, corpus_dtype: Optional[str] = None,
         intermediate=None, final=None,
         cand_qty: int = 100, interm_qty: int = 50, final_qty: int = 10,
         host_parallel: bool = True,
@@ -150,11 +151,19 @@ class ShardedPipeline:
         backend that cannot serve the space falls back to reference shard
         by shard.  Mutually exclusive with ``generator_factory`` (a custom
         factory owns its generators' execution entirely).
+
+        ``corpus_dtype`` casts the corpus to a residency dtype *before*
+        sharding (``"bfloat16"`` halves every shard's footprint; scores
+        stay f32 — the precision contract in ``core.spaces``).  Casting
+        commutes with row-slicing, so a bf16 sharded pipeline stays
+        bit-identical to the unsharded bf16 scan.
         """
         if backend is not None and generator_factory is not None:
             raise ValueError(
                 "pass either backend= or generator_factory=, not both: a "
                 "custom factory owns its generators' execution path")
+        if corpus_dtype is not None:
+            corpus = cast_corpus(corpus, canonical_dtype(corpus_dtype))
         shards = shard_corpus(corpus, n_shards, ctx=ctx, axis=axis)
         if generator_factory is None:
             def generator_factory(shard: CorpusShard):
@@ -174,6 +183,38 @@ class ShardedPipeline:
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    @property
+    def corpus_dtype(self) -> Optional[str]:
+        """The shards' common corpus residency dtype (None when the
+        per-shard generators disagree or carry no dtype seam)."""
+        dts = {getattr(g, "corpus_dtype", None) for g in self.generators}
+        if len(dts) == 1 and (d := dts.pop()) is not None:
+            return d
+        return None
+
+    def with_corpus_dtype(self, dtype) -> "ShardedPipeline":
+        """Same shards, different corpus residency dtype: every per-shard
+        generator is recast (casting commutes with the row-slicing that
+        built the shards, so merged results equal an unsharded cast
+        corpus bit for bit).  The rebound pipeline owns a fresh
+        host-parallel pool — close it separately.  Raises TypeError when
+        a shard generator has no dtype seam (e.g. per-shard graph-ANN)."""
+        for g in self.generators:
+            if not hasattr(g, "with_corpus_dtype"):
+                raise TypeError(
+                    f"shard generator {type(g).__name__} does not take a "
+                    "corpus residency dtype")
+        generators = tuple(g.with_corpus_dtype(dtype)
+                           for g in self.generators)
+        shards = tuple(
+            dataclasses.replace(s, corpus=getattr(g, "corpus", s.corpus))
+            for s, g in zip(self.shards, generators))
+        executor = (ThreadPoolExecutor(max_workers=self.n_shards,
+                                       thread_name_prefix="shard")
+                    if self.executor is not None else None)
+        return dataclasses.replace(self, shards=shards,
+                                   generators=generators, executor=executor)
 
     def with_backend(self, backend) -> "ShardedPipeline":
         """Same shards, different execution path: every per-shard generator

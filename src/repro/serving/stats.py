@@ -83,6 +83,10 @@ class EndpointSnapshot:
     # execution-backend identity serving this endpoint (None = opaque
     # runner / no backend declared at registration)
     backend: Optional[str] = None
+    # corpus residency dtype behind this endpoint ("float32"/"bfloat16";
+    # None = opaque runner / no dtype declared) — the precision tier a
+    # latency or quality delta should be attributed to
+    corpus_dtype: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +133,7 @@ class ServingStats:
         self._depth_fns: Dict[str, Callable[[], int]] = {}
         self._depth_limits: Dict[str, int] = {}
         self._backends: Dict[str, str] = {}
+        self._corpus_dtypes: Dict[str, str] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -136,7 +141,8 @@ class ServingStats:
     def register_endpoint(self, name: str,
                           depth_fn: Optional[Callable[[], int]] = None,
                           depth_limit: Optional[int] = None,
-                          backend: Optional[str] = None):
+                          backend: Optional[str] = None,
+                          corpus_dtype: Optional[str] = None):
         with self._lock:
             self._endpoints.setdefault(name, _EndpointStats(name))
             if depth_fn is not None:
@@ -145,6 +151,8 @@ class ServingStats:
                 self._depth_limits[name] = depth_limit
             if backend is not None:
                 self._backends[name] = backend
+            if corpus_dtype is not None:
+                self._corpus_dtypes[name] = corpus_dtype
 
     def _ep(self, name: str) -> _EndpointStats:
         return self._endpoints.setdefault(name, _EndpointStats(name))
@@ -218,6 +226,7 @@ class ServingStats:
                     rejected=ep.overload["rejected"],
                     shed=ep.overload["shed"],
                     backend=self._backends.get(name),
+                    corpus_dtype=self._corpus_dtypes.get(name),
                 )
                 total += ep.n_requests
             return ServiceSnapshot(

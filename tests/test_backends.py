@@ -176,11 +176,23 @@ class TestResolution:
         assert PallasBackend().supports(DenseSpace("l2"), c) is None
 
     def test_pallas_refuses_unsupported_dtype(self):
+        """The capability matrix follows the precision contract: f32 and
+        bf16 corpora are served (dense AND sparse/fused components —
+        tests/test_bf16.py sweeps the bf16 tier); anything else falls
+        back to the library path."""
         _q, c = _mk(64, 16, 2)
         assert PallasBackend().supports(
             DenseSpace("ip"), c.astype(jnp.int8)) is not None
         assert PallasBackend().supports(
             DenseSpace("ip"), c.astype(jnp.bfloat16)) is None
+        space, _qs, cs = _sparse_setup()
+        bf16_sparse = type(cs)(cs.indices, cs.values.astype(jnp.bfloat16))
+        assert PallasBackend().supports(space, bf16_sparse) is None
+        fused = FusedSpace(space.vocab_size)
+        assert PallasBackend().supports(
+            fused, FusedVectors(c.astype(jnp.bfloat16), bf16_sparse)) is None
+        assert PallasBackend().supports(
+            fused, FusedVectors(c.astype(jnp.float16), None)) is not None
 
     def test_instance_passthrough_and_fallback(self):
         q, c = _mk(64, 16, 2)

@@ -1,13 +1,19 @@
-"""Docs-rot guard: every relative markdown link in the repo resolves, and
-every command quoted in README.md / ROADMAP.md points at files that exist
-(keeps the documentation pass honest as the tree moves)."""
+"""Docs-rot guard: every relative markdown link in the repo resolves,
+every command quoted in README.md / ROADMAP.md points at files that
+exist, and the committed benchmark artifact still satisfies the schema
+its CI job validates (keeps the documentation pass honest as the tree
+moves)."""
 
+import copy
+import json
 import re
+import sys
 from pathlib import Path
 
 import pytest
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))          # benchmarks/ is a repo-root package
 
 # [text](target) — target without whitespace (markdown inline links)
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -66,3 +72,81 @@ def test_tier1_command_documented_consistently():
     roadmap = (REPO / "ROADMAP.md").read_text()
     assert "python -m pytest -x -q" in readme
     assert "python -m pytest -x -q" in roadmap
+
+
+class TestBenchArtifact:
+    """BENCH_backends.json (a generated, gitignored trajectory artifact)
+    must satisfy the schema CI's benchmark smoke job enforces — and the
+    validator itself must be able to reject.  The rejection tests run on
+    a synthetic reference payload so they work on a fresh clone; a local
+    artifact, when present, is validated too."""
+
+    def _payload(self):
+        """Synthetic reference payload: the mutation tests below always
+        use this (never local disk state, which may be a stale artifact
+        from an older serve_bench)."""
+        row = {"qps": 100.0, "p50_ms": 1.0, "p99_ms": 2.0}
+        rows = [{"space": s, "dtype": d, "backend": b,
+                 "identity": b if b != "pallas" else "pallas(tile_n=auto)",
+                 "corpus_dtype": d, **row}
+                for s in ("dense", "fused")
+                for d in ("float32", "bfloat16")
+                for b in ("reference", "streaming", "pallas")]
+        return {"bench": "serve_backends", "schema": 2, "n_docs": 1024,
+                "dim": 64, "requests": 96, "platform": "cpu",
+                "fused_meta": {"vocab": 512, "nnz": 16, "requests": 32},
+                "requested": {"spaces": ["dense", "fused"],
+                              "dtypes": ["float32", "bfloat16"],
+                              "backends": ["reference", "streaming",
+                                           "pallas"]},
+                "rows": rows}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+
+    def test_local_artifact_validates_when_current(self):
+        """A local artifact is only held to the schema when it claims the
+        current schema version — a stale pre-schema file (or none at
+        all, e.g. a fresh clone) is not this checkout's problem."""
+        from benchmarks.validate_bench import EXPECTED_SCHEMA, validate
+        path = REPO / "BENCH_backends.json"
+        if not path.exists():
+            pytest.skip("no local benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/serve_bench.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_missing_cell(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        dropped = payload["rows"].pop()
+        errors = validate(payload)
+        assert any("never ran" in e and dropped["backend"] in e
+                   for e in errors)
+
+    def test_validator_rejects_fallback_identity(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"] if r["backend"] == "pallas")
+        row["identity"] = "reference"
+        assert any("fallback" in e for e in validate(payload))
+
+    def test_validator_rejects_dtype_mismatch_and_bad_numbers(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["corpus_dtype"] = "float64"
+        payload["rows"][1]["qps"] = -1.0
+        errors = validate(payload)
+        assert any("corpus_dtype" in e for e in errors)
+        assert any("positive" in e for e in errors)
+
+    def test_validator_requires_bf16_tier(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["requested"]["dtypes"] = ["float32"]
+        payload["rows"] = [r for r in payload["rows"]
+                           if r["dtype"] == "float32"]
+        assert any("bf16" in e for e in validate(payload))

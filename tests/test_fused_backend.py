@@ -359,18 +359,20 @@ class TestResolution:
     def test_capability_refusals_fall_back(self):
         v = 30
         corpus, _ = _fused_setup(64, v, 4, 8, 2)
-        bf16_dense = FusedVectors(corpus.dense.astype(jnp.bfloat16),
-                                  corpus.sparse)
-        bf16_vals = FusedVectors(corpus.dense,
-                                 SparseVectors(corpus.sparse.indices,
-                                               corpus.sparse.values.astype(
-                                                   jnp.bfloat16)))
+        # bf16 components are INSIDE the precision contract now (PR 5,
+        # tests/test_bf16.py) — the refusal cases are dtypes outside it
+        f16_dense = FusedVectors(corpus.dense.astype(jnp.float16),
+                                 corpus.sparse)
+        f16_vals = FusedVectors(corpus.dense,
+                                SparseVectors(corpus.sparse.indices,
+                                              corpus.sparse.values.astype(
+                                                  jnp.float16)))
         for space, c in [
             (FusedSpace(v, dense_kind="l2"), corpus),        # l2 fused
             (FusedSpace(v, dense_kind="cosine"), corpus),    # cosine fused
             (SparseSpace(v, "cosine"), corpus.sparse),       # cosine sparse
-            (FusedSpace(v), bf16_dense),                     # non-f32 dense
-            (FusedSpace(v), bf16_vals),                      # non-f32 values
+            (FusedSpace(v), f16_dense),                      # non-contract
+            (FusedSpace(v), f16_vals),                       # dtypes
             (FusedSpace(v), FusedVectors(None, None)),       # empty corpus
         ]:
             assert PallasBackend().supports(space, c) is not None, space
