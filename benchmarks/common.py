@@ -98,6 +98,83 @@ def planted_margin_dense(n: int, d: int, b: int, k: int, seed: int = 0):
             jnp.asarray(planted, jnp.int32))
 
 
+def planted_cluster_dense(n: int, d: int, b: int, k: int,
+                          n_clusters: int = 8, seed: int = 0):
+    """(queries [B, D], corpus [N, D]) f32 planted-cluster data for the
+    ANN measured-recall gates — margin-planted AND graph-navigable.
+
+    Row ``i`` belongs to cluster ``c = i % C`` with within-cluster rank
+    ``i // C`` and weight ``t = 2 - rank/m`` on axis ``c`` (``m = n/C``
+    rows per cluster, so ``t ∈ (1, 2]``); query ``j`` targets cluster
+    ``j % C`` with weight 2 on the same axis.  Noise is confined to
+    *disjoint* coordinate bands — queries in ``[C, 2C)``, corpus in
+    ``[2C, d)`` — so every query·corpus score is exactly ``2t`` for
+    same-cluster rows and exactly 0 otherwise: the oracle top-k is the
+    query's cluster's k best ranks with a guaranteed ``2/m`` gap per
+    rank and a ≥ 2 margin over other clusters.
+
+    Navigability: corpus-corpus scores are ``t_i·t_j ≥ 1`` within a
+    cluster vs ``|z_i·z_j| ≤ 1/16`` across (corpus noise has norm 1/4),
+    so NN-descent's top-``degree`` neighbors of every node are its
+    cluster's best-ranked members — one hop from ANY cluster member
+    reaches the true top-k, and the round-robin cluster assignment puts
+    members of every cluster into the linspace entry sample.  numpy
+    generator: data identical across jax pins."""
+    C = n_clusters
+    assert d >= 2 * C + 2 and n % C == 0 and k <= n // C
+    rng = np.random.default_rng(seed)
+    m = n // C
+    t = 2.0 - (np.arange(n) // C) / m
+    c = np.zeros((n, d))
+    c[np.arange(n), np.arange(n) % C] = t
+    z = rng.standard_normal((n, d - 2 * C))
+    c[:, 2 * C:] = 0.25 * z / np.linalg.norm(z, axis=1, keepdims=True)
+    q = np.zeros((b, d))
+    q[np.arange(b), np.arange(b) % C] = 2.0
+    w = rng.standard_normal((b, C))
+    q[:, C:2 * C] = w / np.linalg.norm(w, axis=1, keepdims=True)
+    return jnp.asarray(q, jnp.float32), jnp.asarray(c, jnp.float32)
+
+
+def planted_cluster_fused(n: int, v: int, nnz: int, dd: int, b: int, k: int,
+                          n_clusters: int = 8, seed: int = 0):
+    """(fused_corpus, fused_queries) planted-cluster data whose sparse
+    and dense components plant the SAME cluster ranking, so one
+    construction serves all three ANN recall gates: ``corpus.dense``
+    under a DenseSpace, ``corpus.sparse`` under a SparseSpace, and the
+    pair under any non-negative fused mixing (component scores are each
+    ``2t`` for same-cluster rows and 0 otherwise, so every mixing keeps
+    the order and the margins).
+
+    Sparse vocab bands mirror the dense coordinate bands: term ``c < C``
+    is the cluster term (value ``t`` — always above the ≤ 0.15
+    background, so it survives the top-``nnz`` export), query-only noise
+    terms live in ``[C, 2C)`` and corpus-only noise terms in
+    ``[2C, v)``."""
+    from repro.core.sparse import from_dense
+    from repro.core.spaces import FusedVectors
+
+    C = n_clusters
+    assert (v >= 2 * C + 2 and dd >= 2 * C + 2 and n % C == 0
+            and k <= n // C and nnz >= 2)
+    rng = np.random.default_rng(seed)
+    m = n // C
+    t = 2.0 - (np.arange(n) // C) / m
+    cd = rng.uniform(0.05, 0.15, (n, v)) * (rng.uniform(size=(n, v)) > 0.9)
+    cd[:, :2 * C] = 0.0
+    cd[np.arange(n), np.arange(n) % C] = t
+    qd = np.zeros((b, v))
+    qd[np.arange(b), np.arange(b) % C] = 2.0
+    qd[:, C:2 * C] = rng.uniform(0.05, 0.15, (b, C))
+    qdense, cdense = planted_cluster_dense(
+        n, dd, b, k, n_clusters=C, seed=seed + 1)
+    corpus = FusedVectors(cdense,
+                          from_dense(jnp.asarray(cd, jnp.float32), nnz))
+    queries = FusedVectors(qdense,
+                           from_dense(jnp.asarray(qd, jnp.float32), nnz))
+    return corpus, queries
+
+
 def planted_margin_fused(n: int, v: int, nnz: int, dd: int, b: int, k: int,
                          seed: int = 0):
     """(fused_corpus, fused_queries) with a planted *sparse* margin:

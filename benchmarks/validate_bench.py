@@ -1,20 +1,30 @@
-"""Schema validator for ``BENCH_backends.json`` — the CI benchmark smoke
-job's gate.
+"""Schema validator for the CI benchmark smoke job's tracked artifacts.
 
 A benchmark artifact is only evidence if it really measured what it
-claims: this checks that every *requested* (space, dtype, backend) cell
-produced exactly one row, that each row's endpoint identity actually
-starts with its requested backend (no silent capability fallback
-publishing reference numbers under a kernel's name), that each row's
-served ``corpus_dtype`` equals its requested dtype, and that the bf16
-tier is present (the precision contract's rows can't quietly drop out
-of the trajectory).
+claims.  ``validate(payload)`` dispatches on ``payload["bench"]``:
+
+``serve_backends`` (``BENCH_backends.json``, schema 2)
+    Every *requested* (space, dtype, backend) cell produced exactly one
+    row, each row's endpoint identity actually starts with its requested
+    backend (no silent capability fallback publishing reference numbers
+    under a kernel's name), each row's served ``corpus_dtype`` equals its
+    requested dtype, and the bf16 tier is present (the precision
+    contract's rows can't quietly drop out of the trajectory).
+
+``ann_tradeoff`` (``BENCH_ann.json``, schema 1)
+    Every *requested* (space, method, budget) cell produced exactly one
+    row, each row's identity starts with its method (the sweep really
+    went through the registered approximate backend, not a fallback),
+    recall/dist_frac/qps are sane numbers, and — the ANN tier's contract
+    point — the max-budget row of every (space, method) pair meets the
+    artifact's declared ``recall_target``.
 
 Usable as a CLI (exit 1 + message on the first violation) and as a
 library (``validate(payload) -> list_of_errors``) so the test suite can
-guard the committed artifact against rot::
+guard the committed artifacts against rot::
 
     PYTHONPATH=src:. python -m benchmarks.validate_bench BENCH_backends.json
+    PYTHONPATH=src:. python -m benchmarks.validate_bench BENCH_ann.json
 """
 
 from __future__ import annotations
@@ -31,9 +41,27 @@ ROW_KEYS = ("space", "dtype", "backend", "identity", "corpus_dtype",
             "qps", "p50_ms", "p99_ms")
 NUMERIC_ROW_KEYS = ("qps", "p50_ms", "p99_ms")
 
+ANN_EXPECTED_SCHEMA = 1
+ANN_TOP_LEVEL_KEYS = ("bench", "schema", "n_docs", "k", "platform",
+                      "recall_target", "requested", "rows")
+ANN_ROW_KEYS = ("space", "method", "budget", "identity", "recall",
+                "dist_frac", "qps")
+
+
+def _positive_finite(v) -> bool:
+    return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
+
 
 def validate(payload: dict) -> List[str]:
-    """All schema violations in ``payload`` (empty list == valid)."""
+    """All schema violations in ``payload`` (empty list == valid).
+    Dispatches on ``payload["bench"]``."""
+    bench = payload.get("bench")
+    if bench == "ann_tradeoff":
+        return _validate_ann_tradeoff(payload)
+    return _validate_serve_backends(payload)
+
+
+def _validate_serve_backends(payload: dict) -> List[str]:
     errors = []
     for key in TOP_LEVEL_KEYS:
         if key not in payload:
@@ -75,8 +103,7 @@ def validate(payload: dict) -> List[str]:
                 f"!= requested dtype {row['dtype']!r}")
         for k in NUMERIC_ROW_KEYS:
             v = row[k]
-            if not isinstance(v, (int, float)) or not math.isfinite(v) \
-                    or v <= 0:
+            if not _positive_finite(v):
                 errors.append(f"rows[{i}].{k} = {v!r} is not a positive "
                               "finite number")
 
@@ -87,6 +114,78 @@ def validate(payload: dict) -> List[str]:
                     errors.append(
                         f"requested cell ({space}, {dtype}, {backend}) "
                         "never ran")
+    return errors
+
+
+def _validate_ann_tradeoff(payload: dict) -> List[str]:
+    errors = []
+    for key in ANN_TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["schema"] != ANN_EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != "
+                      f"{ANN_EXPECTED_SCHEMA}")
+    target = payload["recall_target"]
+    if not isinstance(target, (int, float)) or not 0.0 < target <= 1.0:
+        errors.append(f"recall_target {target!r} is not in (0, 1]")
+        return errors
+    requested = payload["requested"]
+    if not requested.get("spaces"):
+        errors.append("requested.spaces missing or empty")
+    budgets = requested.get("budgets")
+    if not budgets or not isinstance(budgets, dict):
+        errors.append("requested.budgets missing or not a mapping")
+    if errors:
+        return errors
+
+    seen = {}
+    for i, row in enumerate(payload["rows"]):
+        missing = [k for k in ANN_ROW_KEYS if k not in row]
+        if missing:
+            errors.append(f"rows[{i}] missing keys {missing}")
+            continue
+        cell = (row["space"], row["method"], row["budget"])
+        if cell in seen:
+            errors.append(f"rows[{i}] duplicates cell {cell}")
+        seen[cell] = row
+        if not str(row["identity"]).startswith(row["method"]):
+            errors.append(
+                f"rows[{i}] identity {row['identity']!r} does not start "
+                f"with method {row['method']!r} — the row measured a "
+                "fallback path")
+        rec = row["recall"]
+        if not isinstance(rec, (int, float)) or not math.isfinite(rec) \
+                or not 0.0 <= rec <= 1.0:
+            errors.append(f"rows[{i}].recall = {rec!r} is not in [0, 1]")
+        frac = row["dist_frac"]
+        if not isinstance(frac, (int, float)) or not math.isfinite(frac) \
+                or not 0.0 < frac <= 1.0:
+            errors.append(f"rows[{i}].dist_frac = {frac!r} is not in "
+                          "(0, 1]")
+        if not _positive_finite(row["qps"]):
+            errors.append(f"rows[{i}].qps = {row['qps']!r} is not a "
+                          "positive finite number")
+
+    for space in requested["spaces"]:
+        for method, axis in budgets.items():
+            for budget in axis:
+                if (space, method, budget) not in seen:
+                    errors.append(
+                        f"requested cell ({space}, {method}, {budget}) "
+                        "never ran")
+            if not axis:
+                errors.append(f"requested.budgets[{method!r}] is empty")
+                continue
+            # the ANN tier's contract point: the max-budget row must
+            # meet the declared recall target
+            top = seen.get((space, method, max(axis)))
+            if top is not None and isinstance(top["recall"], (int, float)) \
+                    and top["recall"] < target:
+                errors.append(
+                    f"({space}, {method}) max-budget recall "
+                    f"{top['recall']} below declared target {target}")
     return errors
 
 
@@ -107,8 +206,14 @@ def main(argv=None) -> int:
             print(f"  - {e}", file=sys.stderr)
         return 1
     n = len(payload["rows"])
-    print(f"validate_bench: {path} OK — {n} rows cover the full "
-          f"requested (space x dtype x backend) matrix, bf16 tier present")
+    if payload.get("bench") == "ann_tradeoff":
+        print(f"validate_bench: {path} OK — {n} rows cover the full "
+              "requested (space x method x budget) matrix, max-budget "
+              f"recall meets target {payload['recall_target']}")
+    else:
+        print(f"validate_bench: {path} OK — {n} rows cover the full "
+              "requested (space x dtype x backend) matrix, bf16 tier "
+              "present")
     return 0
 
 

@@ -4,7 +4,8 @@ sparse, and FUSED sparse+dense representations (NMSLIB + FlexNeuART in JAX).
 Layering (bottom to top):
   sparse / spaces          representations + distance-agnostic spaces
   brute_force              exact k-NN / MIPS (tiled, sharded)
-  backends                 pluggable execution paths (reference/streaming/pallas)
+  backends                 pluggable execution paths (reference/streaming/
+                           pallas exact; graph_ann/napp approximate)
   inverted_index           exact sparse MIPS via postings (Lucene's role)
   graph_ann / napp         approximate k-NN (NSW/HNSW, NAPP) — TPU-adapted
   scorers / model1         FlexNeuART feature extractors
@@ -17,6 +18,7 @@ from repro.core.spaces import DenseSpace, SparseSpace, FusedSpace, FusedVectors 
 from repro.core.brute_force import TopK, exact_topk, streaming_topk, sharded_exact_topk  # noqa: F401
 from repro.core.backends import (ExecutionBackend, ReferenceBackend,  # noqa: F401
                                  StreamingBackend, PallasBackend,
+                                 GraphANNBackend, NappBackend,
                                  available_backends, make_backend,
                                  register_backend, resolve_backend)
 from repro.core.inverted_index import build_inverted_index, daat_topk  # noqa: F401

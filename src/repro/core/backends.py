@@ -34,17 +34,39 @@ ties toward the lower corpus row id (``tests/test_backends.py`` sweeps
 f32; ``tests/test_bf16.py`` sweeps bf16 plus its vs-f32-oracle recall
 and ULP-error bounds).
 
+Two further backends are **approximate** — the paper's actual headline
+(NMSLIB's SW-graph and NAPP as pluggable methods over arbitrary
+spaces):
+
+  * ``graph_ann`` — NN-descent graph build + batched beam search
+    (``core.graph_ann``), search budget declared by ``ef``/``hops``;
+  * ``napp`` — pivot-intersection filtering + exact re-rank
+    (``core.napp``), budget declared by ``num_search``/``min_times``/
+    ``rerank_qty``.
+
+Both build their index lazily per (space, corpus, n_valid) through a
+bounded warm cache (:func:`ann_index_cache_info`), declare every search
+parameter in ``identity`` (so serving cache keys can never alias an
+approximate result with an exact one), and are governed by the third
+contract tier: **measured recall@k ≥** :data:`ANN_RECALL_TARGET` vs the
+``exact_topk`` oracle at the declared budget (``tests/_recall.py``),
+instead of the exact tiers' bitwise identity.  Asking for ``k`` beyond
+the declared budget (``k > ef`` / ``k > rerank_qty``) raises instead of
+silently degrading recall.  ``"auto"`` never selects an approximate
+backend — ANN is strictly opt-in by name.
+
 :func:`resolve_backend` is the one chooser: it accepts a backend name,
 ``"auto"``, or an instance, runs the capability check against the actual
 (space, corpus) pair, clamps tile sizes to legal values, and *falls back
 to* ``reference`` when the requested path cannot serve the space (e.g.
-the kernel asked to score a cosine space, or a corpus resident in a
-dtype outside the precision contract) — flexibility never breaks, it
-just takes the library path.
+the kernel asked to score a cosine space, a corpus resident in a dtype
+outside the precision contract, or an ANN backend offered a corpus with
+no row axis) — flexibility never breaks, it just takes the library path.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 from typing import Callable, Dict, Optional, Protocol, runtime_checkable
@@ -62,6 +84,8 @@ __all__ = [
     "ReferenceBackend",
     "StreamingBackend",
     "PallasBackend",
+    "GraphANNBackend",
+    "NappBackend",
     "register_backend",
     "available_backends",
     "make_backend",
@@ -71,8 +95,11 @@ __all__ = [
     "auto_tile_n",
     "tile_cache_info",
     "clear_tile_cache",
+    "ann_index_cache_info",
+    "clear_ann_index_cache",
     "AUTO_PALLAS_MIN_ROWS",
     "AUTO_STREAMING_MIN_ROWS",
+    "ANN_RECALL_TARGET",
 ]
 
 # auto-selection thresholds (rows): below these the one-shot reference
@@ -80,6 +107,12 @@ __all__ = [
 # score matrix or the HBM corpus stream starts to matter.
 AUTO_PALLAS_MIN_ROWS = 4096
 AUTO_STREAMING_MIN_ROWS = 32768
+
+# The measured-recall contract tier: every approximate backend must reach
+# recall@k >= this vs the exact_topk oracle at its declared search budget
+# (enforced by tests/_recall.py offline and served-under-load, and by the
+# max-budget rows of the BENCH_ann artifact in CI).
+ANN_RECALL_TARGET = 0.95
 
 
 @runtime_checkable
@@ -458,6 +491,258 @@ class PallasBackend:
 
 
 # ---------------------------------------------------------------------------
+# Approximate backends: lazy per-(space, corpus) index cache.
+# ---------------------------------------------------------------------------
+
+# ANN indexes are built lazily on first search and memoised here, because
+# the seam re-resolves string backends per call (BruteForceGenerator) and
+# served endpoints call topk per batch — rebuilding an NN-descent graph
+# every request would swamp the search itself.  Keys use object identity
+# of (space, corpus) — corpora are long-lived arrays held by pipelines —
+# plus the n_valid slice and every build parameter; values keep strong
+# references to the keyed objects so a recycled id can never alias a
+# different corpus.  Bounded LRU so tests churning many small corpora
+# don't pin them all.  Guarded by a lock: sharded pipelines build
+# per-shard indexes from executor threads concurrently (builds run
+# outside the lock — they are deterministic in their key, so a duplicate
+# race costs time, never correctness).
+_ANN_INDEX_CACHE: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_ANN_INDEX_LOCK = threading.Lock()
+_ANN_INDEX_CAPACITY = 16
+_ANN_INDEX_HITS = 0
+_ANN_INDEX_MISSES = 0
+
+
+def ann_index_cache_info() -> Dict[str, int]:
+    """ANN index cache observability: entry count + lifetime hit/miss
+    counters (uncached tracer-corpus builds count as misses)."""
+    with _ANN_INDEX_LOCK:
+        return {"size": len(_ANN_INDEX_CACHE), "hits": _ANN_INDEX_HITS,
+                "misses": _ANN_INDEX_MISSES}
+
+
+def clear_ann_index_cache():
+    """Drop all cached ANN indexes and zero the counters (tests, corpus
+    reloads)."""
+    global _ANN_INDEX_HITS, _ANN_INDEX_MISSES
+    with _ANN_INDEX_LOCK:
+        _ANN_INDEX_CACHE.clear()
+        _ANN_INDEX_HITS = 0
+        _ANN_INDEX_MISSES = 0
+
+
+def _cached_ann_index(kind: str, space, corpus, n_valid: int, params: tuple,
+                      build):
+    """Memoise ``build()`` per (backend kind, space, corpus, n_valid,
+    build params).  Tracer corpora (a backend called under ``jit`` with
+    the corpus as a traced argument) bypass the cache — the build simply
+    inlines into the trace."""
+    global _ANN_INDEX_HITS, _ANN_INDEX_MISSES
+    if any(isinstance(leaf, jax.core.Tracer)
+           for leaf in jax.tree.leaves(corpus)):
+        with _ANN_INDEX_LOCK:
+            _ANN_INDEX_MISSES += 1
+        return build()
+    key = (kind, id(space), id(corpus), int(n_valid), params)
+    with _ANN_INDEX_LOCK:
+        hit = _ANN_INDEX_CACHE.get(key)
+        if hit is not None and hit[0] is space and hit[1] is corpus:
+            _ANN_INDEX_CACHE.move_to_end(key)
+            _ANN_INDEX_HITS += 1
+            return hit[2]
+    value = build()
+    # A concrete corpus does NOT imply a concrete index: a first search
+    # under `jit` stages the build's scans into the surrounding trace
+    # (omnistaging), so `value` holds tracers that would outlive the
+    # trace if cached — treat that build as uncacheable (it inlines into
+    # the jaxpr; warm the cache eagerly first to fold the index in as
+    # constants instead).
+    if any(isinstance(leaf, jax.core.Tracer)
+           for leaf in jax.tree.leaves(value)):
+        with _ANN_INDEX_LOCK:
+            _ANN_INDEX_MISSES += 1
+        return value
+    with _ANN_INDEX_LOCK:
+        _ANN_INDEX_MISSES += 1
+        _ANN_INDEX_CACHE[key] = (space, corpus, value)
+        _ANN_INDEX_CACHE.move_to_end(key)
+        while len(_ANN_INDEX_CACHE) > _ANN_INDEX_CAPACITY:
+            _ANN_INDEX_CACHE.popitem(last=False)
+    return value
+
+
+def _ann_node_block(n: int, target: int = 512) -> int:
+    """Largest divisor of ``n`` not exceeding ``target`` — NN-descent
+    scans node blocks with static shapes, so the block must divide N."""
+    for blk in range(min(n, target), 0, -1):
+        if n % blk == 0:
+            return blk
+    return 1
+
+
+def _slice_rows(corpus, n_valid: int):
+    return jax.tree.map(lambda x: x[:n_valid], corpus)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphANNBackend:
+    """Approximate top-k via a navigable proximity graph: NN-descent
+    build (``graph_ann.nn_descent``) + fixed-hop batched beam search
+    (``graph_ann.beam_search``) — the paper's SW-graph method, TPU-cast.
+
+    The index is built lazily on first search per (space, corpus,
+    n_valid) and memoised (:func:`ann_index_cache_info`).  ``ef`` is the
+    declared search budget: asking for ``k > ef`` raises instead of
+    silently losing recall.  ``hops=None`` uses the host-side default
+    ``max(4, 2·ln N)``.  Governed by the measured-recall tier
+    (recall@k ≥ :data:`ANN_RECALL_TARGET` vs the exact oracle), not the
+    exact tiers' bitwise contract — never selected by ``"auto"``."""
+
+    degree: int = 16
+    rounds: int = 6
+    ef: int = 64
+    hops: Optional[int] = None
+    entry_count: Optional[int] = None
+    seed: int = 0
+    name = "graph_ann"
+
+    @property
+    def identity(self) -> str:
+        hops = "auto" if self.hops is None else self.hops
+        entries = "auto" if self.entry_count is None else self.entry_count
+        return (f"graph_ann(degree={self.degree},rounds={self.rounds},"
+                f"ef={self.ef},hops={hops},entries={entries},"
+                f"seed={self.seed})")
+
+    def supports(self, space, corpus) -> Optional[str]:
+        if _rows(corpus) is None:
+            return ("graph_ann backend needs a materialized row-major "
+                    "corpus (array or pytree of [N, ...] arrays)")
+        return None
+
+    def _index(self, space, corpus, n_valid: int):
+        from repro.core import graph_ann as graph_ann_lib
+
+        n_total = _rows(corpus)
+        params = (self.degree, self.rounds, self.entry_count, self.seed)
+
+        def build():
+            search_corpus = (corpus if n_valid == n_total
+                             else _slice_rows(corpus, n_valid))
+            index = graph_ann_lib.nn_descent(
+                space, search_corpus, n_valid,
+                degree=self.degree, rounds=self.rounds,
+                key=jax.random.PRNGKey(self.seed),
+                node_block=_ann_node_block(n_valid),
+                entry_count=self.entry_count)
+            return search_corpus, index
+
+        return _cached_ann_index("graph_ann", space, corpus, n_valid,
+                                 params, build)
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        from repro.core import graph_ann as graph_ann_lib
+
+        n = _rows(corpus)
+        n_valid = n if n_valid is None else min(n_valid, n)
+        b = _batch_rows(query_repr)
+        k_eff = min(k, n_valid)
+        if k_eff > self.ef:
+            raise ValueError(
+                f"graph_ann declared search budget ef={self.ef} cannot "
+                f"produce top-{k_eff}; raise ef or lower k")
+        if not k_eff:
+            return (_reference_tail(_empty_topk(b), b, k, n_valid)
+                    if k else _empty_topk(b))
+        search_corpus, index = self._index(space, corpus, n_valid)
+        head = graph_ann_lib.beam_search(
+            space, query_repr, search_corpus, index, n_valid,
+            k=k_eff, ef=self.ef, hops=self.hops)
+        return (head if k_eff == k
+                else _reference_tail(head, b, k, n_valid))
+
+
+@dataclasses.dataclass(frozen=True)
+class NappBackend:
+    """Approximate top-k via NAPP (``core.napp``): pivot-intersection
+    counting as one int matmul, then exact re-rank of the best
+    ``rerank_qty`` candidates — the paper's permutation-family method.
+
+    The pivot index is built lazily per (space, corpus, n_valid) and
+    memoised.  ``rerank_qty`` is the declared budget: ``k > rerank_qty``
+    raises.  Pivot counts clamp to the corpus (``num_pivots``/
+    ``num_search``/``num_index`` can't exceed the rows/pivots actually
+    available) without changing the declared identity.  Measured-recall
+    tier; never selected by ``"auto"``."""
+
+    num_pivots: int = 128
+    num_index: int = 8
+    num_search: int = 8
+    min_times: int = 2
+    rerank_qty: int = 256
+    seed: int = 0
+    name = "napp"
+
+    @property
+    def identity(self) -> str:
+        return (f"napp(pivots={self.num_pivots},index={self.num_index},"
+                f"search={self.num_search},min_times={self.min_times},"
+                f"rerank_qty={self.rerank_qty},seed={self.seed})")
+
+    def supports(self, space, corpus) -> Optional[str]:
+        if _rows(corpus) is None:
+            return ("napp backend needs a materialized row-major corpus "
+                    "(array or pytree of [N, ...] arrays)")
+        return None
+
+    def _index(self, space, corpus, n_valid: int):
+        from repro.core import napp as napp_lib
+
+        n_total = _rows(corpus)
+        params = (self.num_pivots, self.num_index, self.seed)
+
+        def build():
+            search_corpus = (corpus if n_valid == n_total
+                             else _slice_rows(corpus, n_valid))
+            p = min(self.num_pivots, n_valid)
+            index = napp_lib.build_napp(
+                space, search_corpus, n_valid, num_pivots=p,
+                num_index=min(self.num_index, p),
+                key=jax.random.PRNGKey(self.seed))
+            return search_corpus, index
+
+        return _cached_ann_index("napp", space, corpus, n_valid,
+                                 params, build)
+
+    def topk(self, space, query_repr, corpus, k: int,
+             n_valid: Optional[int] = None) -> TopK:
+        from repro.core import napp as napp_lib
+
+        n = _rows(corpus)
+        n_valid = n if n_valid is None else min(n_valid, n)
+        b = _batch_rows(query_repr)
+        k_eff = min(k, n_valid)
+        if k_eff > self.rerank_qty:
+            raise ValueError(
+                f"napp declared re-rank budget rerank_qty="
+                f"{self.rerank_qty} cannot produce top-{k_eff}; raise "
+                f"rerank_qty or lower k")
+        if not k_eff:
+            return (_reference_tail(_empty_topk(b), b, k, n_valid)
+                    if k else _empty_topk(b))
+        search_corpus, index = self._index(space, corpus, n_valid)
+        p = index.pivot_ids.shape[0]
+        head = napp_lib.napp_search(
+            space, query_repr, search_corpus, index, k=k_eff,
+            num_search=min(self.num_search, p),
+            min_times=self.min_times,
+            rerank_qty=min(self.rerank_qty, n_valid))
+        return (head if k_eff == k
+                else _reference_tail(head, b, k, n_valid))
+
+
+# ---------------------------------------------------------------------------
 # Registry + resolution.
 # ---------------------------------------------------------------------------
 
@@ -487,6 +772,8 @@ def make_backend(name: str, **kwargs) -> ExecutionBackend:
 register_backend("reference", ReferenceBackend)
 register_backend("streaming", StreamingBackend)
 register_backend("pallas", PallasBackend)
+register_backend("graph_ann", GraphANNBackend)
+register_backend("napp", NappBackend)
 
 
 def _auto(space, corpus, tile_n: Optional[int] = None) -> ExecutionBackend:
@@ -501,7 +788,12 @@ def _auto(space, corpus, tile_n: Optional[int] = None) -> ExecutionBackend:
     [B, N, NNZ] gather), so large corpora take it on every platform
     (interpret mode off-TPU — same arithmetic); streaming serves the
     spaces the kernel refuses (e.g. sparse cosine); small corpora stay
-    on reference."""
+    on reference.
+
+    Approximate backends are NEVER auto-selected: trading recall for
+    speed is an explicit opt-in (``backend="graph_ann"``/``"napp"``),
+    because only the caller knows whether its consumers tolerate the
+    measured-recall tier instead of exact results."""
     n = _rows(corpus)
     if n is None:
         return ReferenceBackend()
@@ -532,8 +824,8 @@ def resolve_backend(backend="auto", space=None, corpus=None,
     searchable; it just takes the library path).  With ``space``/
     ``corpus`` omitted the capability check is skipped — the caller only
     wants the instance (e.g. a label at endpoint registration).
-    ``kwargs`` (``tile_n``, ``interpret``) reach the named backend's
-    constructor.
+    ``kwargs`` (``tile_n``, ``interpret``; for ANN backends ``ef``,
+    ``rerank_qty``, ...) reach the named backend's constructor.
     """
     if backend is None:
         backend = "auto"

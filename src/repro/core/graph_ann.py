@@ -26,6 +26,7 @@ key design property (we never touch vector internals here, only
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -40,6 +41,7 @@ __all__ = [
     "gather_items",
     "score_many",
     "nn_descent",
+    "default_hops",
     "beam_search",
     "beam_search_early_exit",
 ]
@@ -132,7 +134,10 @@ def nn_descent(
     key = jax.random.PRNGKey(0) if key is None else key
     n = n_items
     r = degree
-    assert n % node_block == 0, f"n_items {n} must divide node_block {node_block}"
+    if n % node_block != 0:
+        raise ValueError(
+            f"node_block {node_block} must divide n_items {n} "
+            f"(blocks are scanned with static shapes)")
 
     k0, k1 = jax.random.split(key)
     neighbors = jax.random.randint(k0, (n, r), 0, n, dtype=jnp.int32)
@@ -173,7 +178,10 @@ def nn_descent(
         key, rk = jax.random.split(key)
         neighbors = one_round(neighbors, rk)
 
-    e = entry_count or max(16, int(n**0.5))
+    # clamp to n: more entries than items would duplicate ids in the
+    # linspace sample, seeding the beam with repeated rows (e <= n keeps
+    # the stride >= 1, so the int cast stays strictly increasing)
+    e = min(n, entry_count or max(16, int(n**0.5)))
     entry_ids = jnp.linspace(0, n - 1, e).astype(jnp.int32)
     return GraphIndex(neighbors, entry_ids)
 
@@ -181,6 +189,11 @@ def nn_descent(
 # ---------------------------------------------------------------------------
 # Batched beam search (the NSW/HNSW query algorithm, vectorised).
 # ---------------------------------------------------------------------------
+
+def default_hops(n_items: int) -> int:
+    """Default fixed hop count ``max(4, int(2·ln N))`` — HNSW's expected
+    search path length — computed host-side (no device round-trip)."""
+    return max(4, int(2 * math.log(max(n_items, 1))))
 
 class _BeamState(NamedTuple):
     beam: TopK            # [B, ef] current best (ids deduped)
@@ -195,17 +208,24 @@ def _init_beam(space, queries, corpus, index: GraphIndex, ef: int, batch: int, n
     vals, pos = jax.lax.top_k(s, k0)
     ids = index.entry_ids[pos]
     if k0 < ef:
+        # Pad empty beam slots with the out-of-range sentinel ``n`` (never a
+        # real corpus row) so the visited scatter drops them; padding with 0
+        # would mark item 0 visited and make it unreachable for every query.
         vals = jnp.pad(vals, ((0, 0), (0, ef - k0)), constant_values=-jnp.inf)
-        ids = jnp.pad(ids, ((0, 0), (0, ef - k0)))
+        ids = jnp.pad(ids, ((0, 0), (0, ef - k0)), constant_values=n)
     visited = jnp.zeros((batch, n), dtype=bool)
-    visited = jax.vmap(lambda v, c: v.at[c].set(True))(visited, ids)
+    visited = jax.vmap(lambda v, c: v.at[c].set(True, mode="drop"))(visited, ids)
     return _BeamState(TopK(vals, ids), visited, ids)
 
 
 def _hop(space, queries, corpus, neighbors, state: _BeamState, ef: int):
     b = state.frontier.shape[0]
     r = neighbors.shape[1]
-    cand = neighbors[state.frontier].reshape(b, -1)      # [B, F*R]
+    # Frontier slots may hold the sentinel ``n`` (empty beam pad); clamp so
+    # the neighbor gather stays in range — the extra candidates it surfaces
+    # are real rows and only widen the beam.
+    frontier = jnp.minimum(state.frontier, neighbors.shape[0] - 1)
+    cand = neighbors[frontier].reshape(b, -1)            # [B, F*R]
     seen = jax.vmap(lambda v, c: v[c])(state.visited, cand)
     # in-candidate dedupe via sort
     order = jnp.argsort(cand, axis=1)
@@ -249,7 +269,7 @@ def beam_search(
         batch = queries.indices.shape[0]
     else:
         batch = queries.shape[0]
-    hops = hops if hops is not None else max(4, int(2 * jnp.log(jnp.asarray(float(n_items)))))
+    hops = hops if hops is not None else default_hops(n_items)
     state = _init_beam(space, queries, corpus, index, ef, batch, n_items)
 
     def body(state, _):

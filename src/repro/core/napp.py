@@ -86,4 +86,13 @@ def napp_search(
     cand_counts = jnp.take_along_axis(counts, cand, axis=1)
     s = jnp.where(cand_counts < 0, -jnp.inf, s)
     vals, pos = jax.lax.top_k(s, k)
-    return TopK(vals, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32))
+    ids = jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
+    # Degenerate tail: when fewer than k candidates pass ``min_times`` the
+    # -inf slots would surface whatever candidate id top_k happened to keep.
+    # Replace them with the deterministic padded-tail ids ``n, n+1, ...`` —
+    # the same semantics ``backends._reference_tail`` gives exact backends.
+    n = index.membership.shape[0]
+    dead = ~(vals > -jnp.inf)
+    tail_rank = jnp.cumsum(dead.astype(jnp.int32), axis=1) - 1
+    ids = jnp.where(dead, n + tail_rank, ids)
+    return TopK(vals, ids)

@@ -53,8 +53,11 @@ class BruteForceGenerator:
     ``backend`` selects the execution path (an
     :class:`~repro.core.backends.ExecutionBackend` instance, a name, or
     ``"auto"``); ``None`` keeps the historical one-shot reference path.
-    Every backend is exact — they return bit-identical results on the
-    spaces they share, so swapping backends never changes answers.
+    The exact backends (reference/streaming/pallas) return bit-identical
+    results on the spaces they share, so swapping between them never
+    changes answers; the approximate backends (``"graph_ann"``,
+    ``"napp"`` — opt-in by name, never ``"auto"``) trade bitwise
+    identity for the measured-recall contract in ``tests/_recall.py``.
 
     ``corpus_dtype`` selects the corpus *residency* dtype
     (:data:`~repro.core.spaces.CORPUS_DTYPES`): passing ``"bfloat16"``
@@ -136,7 +139,8 @@ class StreamingGenerator:
         # forward this generator's tile to tiled targets: it was chosen to
         # bound the working set, which a default tile would silently undo
         kwargs = ({"tile_n": self.tile_n}
-                  if isinstance(backend, str) and backend != "reference"
+                  if isinstance(backend, str)
+                  and backend in ("streaming", "pallas", "auto")
                   else {})
         return BruteForceGenerator(
             self.space, self.corpus, self.n_valid,
@@ -311,17 +315,25 @@ class RetrievalPipeline:
     def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":
         """Paper Fig. 4 experiment descriptor.  Recognised keys:
         candProv (name into context), backend (execution backend name for
-        the candidate stage), corpusDtype (corpus residency dtype for
-        the candidate stage), extrType / extrTypeInterm (extractor
-        configs), model / modelInterm (weight arrays or ensembles),
-        candQty / intermQty / finalQty."""
+        the candidate stage), backendParams (constructor kwargs for a
+        *named* backend, e.g. ``{"ef": 128}`` for graph_ann — requires
+        ``backend``), corpusDtype (corpus residency dtype for the
+        candidate stage), extrType / extrTypeInterm (extractor configs),
+        model / modelInterm (weight arrays or ensembles), candQty /
+        intermQty / finalQty."""
+        from repro.core.backends import make_backend
         from repro.core.fusion import ObliviousTreeEnsemble
 
         gen = context[desc.get("candProv", "candidate_provider")]
         if "corpusDtype" in desc:            # cast before backend
             gen = gen.with_corpus_dtype(desc["corpusDtype"])   # resolution
+        params = desc.get("backendParams")
+        if params and "backend" not in desc:
+            raise ValueError("descriptor key 'backendParams' requires "
+                             "'backend' to name the backend it configures")
         if "backend" in desc:
-            gen = gen.with_backend(desc["backend"])
+            gen = gen.with_backend(make_backend(desc["backend"], **params)
+                                   if params else desc["backend"])
 
         def build(extr_key, model_key):
             if extr_key not in desc:

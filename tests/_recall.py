@@ -1,0 +1,92 @@
+"""The third contract tier — measured recall — as shared test helpers.
+
+The exact tiers promise bitwise identity (f32) or bounded ULP error +
+recall@k == 1.0 (bf16; see ``tests/_precision.py``).  The approximate
+backends (``graph_ann``, ``napp``) cannot promise either: their whole
+point is to *not* score every row.  Their contract
+(docs/ARCHITECTURE.md "Precision contract", tier 3) is instead
+
+    recall@k >= ANN_RECALL_TARGET vs the ``exact_topk`` oracle,
+    at the backend's DECLARED search budget (the ef / hops /
+    num_search / min_times / rerank_qty baked into its ``identity``),
+
+enforced on dense, sparse, and fused spaces, offline and
+served-under-load (``tests/test_recall.py``, CI's ``ann`` marker step),
+and re-measured by the ``BENCH_ann`` artifact's max-budget rows.
+
+Like the bf16 tier, the gate only means something on data where the
+oracle itself is unambiguous: :func:`planted_cluster_corpus` /
+:func:`planted_cluster_fused_corpus` build corpora whose true top-k is
+separated by a guaranteed margin AND whose cluster geometry is
+navigable by a proximity graph (both properties are invariants of the
+construction — see ``benchmarks/common.py`` — not seed lotteries), and
+:func:`require_margin` re-checks the margin at run time.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for the
+# canonical planted-cluster constructions in benchmarks/common.py
+
+from repro.core.backends import ANN_RECALL_TARGET  # noqa: E402  (the ONE
+# declared target: backends, tests, bench validation all read this)
+
+from tests._precision import recall_at_k, require_margin  # noqa: E402,F401
+
+
+def assert_recall_contract(oracle, got, *, target: float = ANN_RECALL_TARGET,
+                           ctx="") -> float:
+    """ANN-tier contract: recall@k of ``got`` vs the exact oracle meets
+    ``target``.  Returns the measured recall so tests can additionally
+    log / bound it."""
+    rec = recall_at_k(oracle.indices, got.indices)
+    assert rec >= target, \
+        f"ANN recall@k {rec:.4f} below declared target {target} {ctx}"
+    return float(rec)
+
+
+def planted_cluster_corpus(n: int, d: int, b: int, k: int, *,
+                           n_clusters: int = 8, seed: int = 0):
+    """(queries, corpus) dense planted-cluster data — delegates to the
+    ONE canonical construction (``benchmarks/common.py:
+    planted_cluster_dense``, where the geometry and its margin /
+    navigability argument live) so the data the tests gate on and the
+    data the BENCH_ann artifact runs on can never drift apart."""
+    from benchmarks.common import planted_cluster_dense
+
+    return planted_cluster_dense(n, d, b, k, n_clusters=n_clusters,
+                                 seed=seed)
+
+
+def planted_cluster_fused_corpus(n: int, v: int, nnz: int, dd: int, b: int,
+                                 k: int, *, n_clusters: int = 8,
+                                 seed: int = 0):
+    """(fused_corpus, fused_queries) whose sparse and dense components
+    plant the same cluster ranking — one construction serves the dense,
+    sparse, and fused recall gates (see ``benchmarks/common.py:
+    planted_cluster_fused``)."""
+    from benchmarks.common import planted_cluster_fused
+
+    return planted_cluster_fused(n, v, nnz, dd, b, k,
+                                 n_clusters=n_clusters, seed=seed)
+
+
+def oracle_margin(oracle_scores, *, min_gap: float = 1e-3):
+    """Run-time validity guard for a recall gate: delegate to
+    ``tests/_precision.require_margin`` on the oracle's k+1 scores, so a
+    drifted construction fails loudly instead of letting the recall
+    assertion measure noise."""
+    require_margin(oracle_scores, min_gap=min_gap)
+
+
+def mean_recall(oracle_indices, got_indices_list) -> float:
+    """Mean recall@k over per-query results gathered one at a time
+    (the served-under-load path returns one row per future)."""
+    recs = [recall_at_k(np.asarray(o)[None], np.asarray(g)[None])
+            for o, g in zip(np.asarray(oracle_indices), got_indices_list)]
+    return float(np.mean(recs))

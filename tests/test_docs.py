@@ -150,3 +150,80 @@ class TestBenchArtifact:
         payload["rows"] = [r for r in payload["rows"]
                            if r["dtype"] == "float32"]
         assert any("bf16" in e for e in validate(payload))
+
+
+class TestAnnBenchArtifact:
+    """BENCH_ann.json (the ANN recall/efficiency frontier) must satisfy
+    the ann_tradeoff schema CI's benchmark smoke job enforces — same
+    synthetic-reference pattern as TestBenchArtifact, plus the ANN
+    tier's distinguishing gate: the max-budget row of every (space,
+    method) pair must meet the artifact's declared recall target."""
+
+    def _payload(self):
+        budgets = {"graph_ann": [16, 64], "napp": [4, 8]}
+        idents = {"graph_ann": "graph_ann(degree=16,rounds=6,ef={b},"
+                               "hops=8,entries=auto,seed=0)",
+                  "napp": "napp(pivots=128,index=8,search={b},"
+                          "min_times=1,rerank_qty=256,seed=0)"}
+        rows = [{"space": s, "method": m, "budget": b,
+                 "identity": idents[m].format(b=b),
+                 "recall": 0.97 if b == max(axis) else 0.7,
+                 "dist_frac": 0.25, "qps": 1000.0}
+                for s in ("dense-ip", "sparse", "fused")
+                for m, axis in budgets.items()
+                for b in axis]
+        return {"bench": "ann_tradeoff", "schema": 1, "n_docs": 256,
+                "k": 10, "platform": "cpu", "recall_target": 0.95,
+                "requested": {"spaces": ["dense-ip", "sparse", "fused"],
+                              "budgets": budgets},
+                "rows": rows}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+
+    def test_local_artifact_validates_when_current(self):
+        from benchmarks.validate_bench import ANN_EXPECTED_SCHEMA, validate
+        path = REPO / "BENCH_ann.json"
+        if not path.exists():
+            pytest.skip("no local ANN benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != ANN_EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/ann_tradeoff.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_missing_cell(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        dropped = payload["rows"].pop()
+        errors = validate(payload)
+        assert any("never ran" in e and dropped["method"] in e
+                   for e in errors)
+
+    def test_validator_rejects_fallback_identity(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["identity"] = "reference"
+        assert any("fallback" in e for e in validate(payload))
+
+    def test_validator_rejects_low_max_budget_recall(self):
+        """The contract point: a max-budget row below the declared
+        target is a violation even if every row is schema-shaped."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"]
+                   if r["method"] == "graph_ann" and r["budget"] == 64)
+        row["recall"] = 0.5
+        assert any("below declared target" in e for e in validate(payload))
+
+    def test_validator_rejects_bad_numbers(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["recall"] = 1.5
+        payload["rows"][1]["dist_frac"] = 0.0
+        payload["rows"][2]["qps"] = float("nan")
+        errors = validate(payload)
+        assert any("recall" in e and "[0, 1]" in e for e in errors)
+        assert any("dist_frac" in e for e in errors)
+        assert any("qps" in e for e in errors)

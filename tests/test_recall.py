@@ -1,0 +1,430 @@
+"""The ANN tier: graph_ann / napp as execution backends under the
+measured-recall contract (tests/_recall.py), plus regressions for the
+seed ANN bugs.
+
+Covers: the `_init_beam` visited-0 entry-pad regression (item 0 must be
+retrievable with a small entry set), nn_descent's ValueError, the
+host-side default hop count, napp's deterministic degenerate tails,
+backend registration / resolution / identity / declared-budget checks,
+the offline recall@10 >= ANN_RECALL_TARGET gate on dense, sparse and
+fused spaces, eager-vs-jit and vmap parity, the lazy index cache,
+per-shard ANN through ShardedPipeline, and served-under-load recall
+behind a ContinuousBatcher endpoint with cache-key isolation from exact
+backends.  CI runs this file via the `ann` marker step.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as backends_lib
+from repro.core import graph_ann, napp
+from repro.core.backends import (ANN_RECALL_TARGET, GraphANNBackend,
+                                 NappBackend, ann_index_cache_info,
+                                 available_backends, clear_ann_index_cache,
+                                 make_backend, resolve_backend)
+from repro.core.brute_force import TopK, exact_topk
+from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
+from repro.core.spaces import DenseSpace, FusedSpace, SparseSpace
+from repro.serving.cache import QueryCache
+from repro.serving.service import RetrievalService
+from repro.serving.sharded import ShardedPipeline
+from tests._recall import (assert_recall_contract, mean_recall,
+                           oracle_margin, planted_cluster_corpus,
+                           planted_cluster_fused_corpus)
+
+pytestmark = pytest.mark.ann
+
+N, D, B, K, C = 512, 32, 16, 10, 8
+VOCAB, NNZ, DD = 64, 8, 32
+
+
+@pytest.fixture(scope="module")
+def dense_data():
+    queries, corpus = planted_cluster_corpus(N, D, B, K, n_clusters=C)
+    space = DenseSpace("ip")
+    oracle = exact_topk(space, queries, corpus, K + 1)
+    oracle_margin(oracle.scores)          # gate validity, not seed luck
+    return space, queries, corpus, TopK(oracle.scores[:, :K],
+                                        oracle.indices[:, :K])
+
+
+@pytest.fixture(scope="module")
+def fused_data():
+    corpus, queries = planted_cluster_fused_corpus(
+        N, VOCAB, NNZ, DD, B, K, n_clusters=C)
+    space = FusedSpace(VOCAB, w_dense=0.5, w_sparse=1.5)
+    oracle = exact_topk(space, queries, corpus, K + 1)
+    oracle_margin(oracle.scores)
+    return space, queries, corpus, TopK(oracle.scores[:, :K],
+                                        oracle.indices[:, :K])
+
+
+@pytest.fixture(scope="module")
+def sparse_data(fused_data):
+    _, queries, corpus, _ = fused_data
+    space = SparseSpace(VOCAB)
+    oracle = exact_topk(space, queries.sparse, corpus.sparse, K + 1)
+    oracle_margin(oracle.scores)
+    return space, queries.sparse, corpus.sparse, TopK(oracle.scores[:, :K],
+                                                      oracle.indices[:, :K])
+
+
+# ---------------------------------------------------------------------------
+# Seed-bug regressions.
+# ---------------------------------------------------------------------------
+
+class TestSeedBugRegressions:
+
+    def test_item_zero_reachable_with_small_entry_set(self):
+        """The `_init_beam` entry-pad regression: with fewer entry points
+        than ef, the seed code padded beam ids with 0 AND marked the pad
+        visited, so corpus item 0 could never be retrieved.  Entry set =
+        three cluster-0 members that are NOT item 0; item 0 is the true
+        top-1 for a cluster-0 query."""
+        n = 64
+        queries, corpus = planted_cluster_corpus(n, D, C, 5, n_clusters=C)
+        space = DenseSpace("ip")
+        q0 = queries[:1]                      # cluster-0 query
+        oracle = exact_topk(space, q0, corpus, 1)
+        assert int(oracle.indices[0, 0]) == 0   # item 0 is the unique best
+        built = graph_ann.nn_descent(space, corpus, n, degree=8, rounds=4,
+                                     key=jax.random.PRNGKey(0), node_block=n)
+        entries = jnp.asarray([8, 16, 24], jnp.int32)   # cluster 0, != 0
+        index = graph_ann.GraphIndex(built.neighbors, entries)
+        got = graph_ann.beam_search(space, q0, corpus, index, n,
+                                    k=5, ef=16, hops=6)
+        assert bool((got.indices[0] == 0).any()), \
+            "item 0 unreachable: entry padding marked it visited"
+        assert int(got.indices[0, 0]) == 0      # and it wins outright
+
+    def test_nn_descent_rejects_bad_node_block_with_valueerror(self):
+        queries, corpus = planted_cluster_corpus(64, D, 1, 1, n_clusters=C)
+        with pytest.raises(ValueError, match="must divide n_items"):
+            graph_ann.nn_descent(DenseSpace("ip"), corpus, 64, node_block=60)
+
+    def test_default_hops_is_host_side_int(self):
+        for n in (1, 16, 512, 100_000):
+            h = graph_ann.default_hops(n)
+            assert type(h) is int
+            assert h == max(4, int(2 * math.log(max(n, 1))))
+
+    def test_beam_search_default_hops_matches_explicit(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        index = graph_ann.nn_descent(space, corpus, N, degree=8, rounds=3,
+                                     key=jax.random.PRNGKey(1))
+        auto = graph_ann.beam_search(space, queries, corpus, index, N,
+                                     k=K, ef=32)
+        explicit = graph_ann.beam_search(space, queries, corpus, index, N,
+                                         k=K, ef=32,
+                                         hops=graph_ann.default_hops(N))
+        np.testing.assert_array_equal(np.asarray(auto.indices),
+                                      np.asarray(explicit.indices))
+        np.testing.assert_array_equal(np.asarray(auto.scores),
+                                      np.asarray(explicit.scores))
+
+    def test_entry_sample_clamped_to_corpus(self):
+        """More default entries than items must not duplicate beam
+        seeds: the linspace sample clamps to n distinct ids."""
+        queries, corpus = planted_cluster_corpus(8, D, 1, 1, n_clusters=8)
+        index = graph_ann.nn_descent(DenseSpace("ip"), corpus, 8, degree=4,
+                                     rounds=2, node_block=8)
+        ids = np.asarray(index.entry_ids)
+        assert len(ids) <= 8 and len(set(ids.tolist())) == len(ids)
+
+
+class TestNappDegenerateTail:
+
+    def _manual_index(self):
+        """Hand-built pivot index where exactly rows 0 and 1 share >= 2
+        pivots with a query whose top-2 pivots are {0, 1}."""
+        member = jnp.zeros((8, 4), jnp.float32)
+        member = member.at[0, 0].set(1.0).at[0, 1].set(1.0)
+        member = member.at[1, 0].set(1.0).at[1, 1].set(1.0)
+        member = member.at[2, 2].set(1.0).at[2, 3].set(1.0)
+        return napp.NappIndex(jnp.arange(4, dtype=jnp.int32), member, 2)
+
+    def test_tail_matches_reference_semantics(self):
+        """k > passing-candidates: the -inf slots carry the deterministic
+        padded-tail ids n, n+1, ... (backends._reference_tail semantics),
+        not whatever candidate id top_k happened to keep."""
+        corpus = jnp.eye(8, 8, dtype=jnp.float32)
+        query = jnp.zeros((1, 8), jnp.float32).at[0, 0].set(3.0).at[0, 1].set(2.0)
+        got = napp.napp_search(DenseSpace("ip"), query, corpus,
+                               self._manual_index(), k=5, num_search=2,
+                               min_times=2, rerank_qty=6)
+        assert np.asarray(got.indices[0]).tolist() == [0, 1, 8, 9, 10]
+        assert np.asarray(got.scores[0])[:2].tolist() == [3.0, 2.0]
+        assert np.isneginf(np.asarray(got.scores[0])[2:]).all()
+
+    def test_tail_is_deterministic_across_calls(self):
+        corpus = jnp.eye(8, 8, dtype=jnp.float32)
+        query = jnp.zeros((1, 8), jnp.float32).at[0, 0].set(3.0).at[0, 1].set(2.0)
+        runs = [napp.napp_search(DenseSpace("ip"), query, corpus,
+                                 self._manual_index(), k=5, num_search=2,
+                                 min_times=2, rerank_qty=6)
+                for _ in range(2)]
+        np.testing.assert_array_equal(np.asarray(runs[0].indices),
+                                      np.asarray(runs[1].indices))
+
+
+# ---------------------------------------------------------------------------
+# Registration / resolution / declared budgets.
+# ---------------------------------------------------------------------------
+
+class TestBackendRegistration:
+
+    def test_ann_backends_registered(self):
+        assert {"graph_ann", "napp"} <= set(available_backends())
+
+    def test_resolve_by_name_with_params(self, dense_data):
+        space, _, corpus, _ = dense_data
+        b = resolve_backend("graph_ann", space, corpus, ef=128, hops=6)
+        assert isinstance(b, GraphANNBackend)
+        assert b.ef == 128 and "ef=128" in b.identity and "hops=6" in b.identity
+        n = resolve_backend("napp", space, corpus, rerank_qty=64)
+        assert isinstance(n, NappBackend)
+        assert "rerank_qty=64" in n.identity
+
+    def test_identity_declares_every_search_param(self):
+        g = GraphANNBackend()
+        for token in ("degree=", "rounds=", "ef=", "hops=", "entries=",
+                      "seed="):
+            assert token in g.identity
+        p = NappBackend()
+        for token in ("pivots=", "index=", "search=", "min_times=",
+                      "rerank_qty=", "seed="):
+            assert token in p.identity
+        # distinct budgets -> distinct identities (cache keys can't alias)
+        assert GraphANNBackend(ef=32).identity != GraphANNBackend(ef=64).identity
+        assert NappBackend(num_search=4).identity != NappBackend().identity
+
+    def test_non_row_major_corpus_falls_back_to_reference(self, dense_data):
+        space = dense_data[0]
+        corpus = {"postings": object()}      # no row axis -> not servable
+        assert resolve_backend("graph_ann", space, corpus).identity == "reference"
+        assert resolve_backend("napp", space, corpus).identity == "reference"
+
+    def test_auto_never_selects_ann(self, dense_data):
+        space, _, corpus, _ = dense_data
+        auto = resolve_backend("auto", space, corpus)
+        assert auto.name in ("reference", "streaming", "pallas")
+
+    def test_k_beyond_declared_budget_raises(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        with pytest.raises(ValueError, match="ef=8"):
+            make_backend("graph_ann", ef=8).topk(space, queries, corpus, K)
+        with pytest.raises(ValueError, match="rerank_qty=4"):
+            make_backend("napp", rerank_qty=4).topk(space, queries, corpus, K)
+
+    def test_backends_frozen_and_hashable(self):
+        assert hash(GraphANNBackend()) == hash(GraphANNBackend())
+        assert NappBackend(seed=3) != NappBackend(seed=4)
+        assert dataclasses.replace(GraphANNBackend(), ef=32).ef == 32
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            GraphANNBackend().ef = 1    # type: ignore[misc]
+
+    def test_descriptor_backend_params(self, dense_data):
+        space, queries, corpus, oracle = dense_data
+        pipe = RetrievalPipeline.from_descriptor(
+            {"backend": "graph_ann", "backendParams": {"ef": 128},
+             "candQty": 32, "finalQty": K},
+            {"candidate_provider": BruteForceGenerator(space, corpus)})
+        assert "ef=128" in pipe.backend.identity
+        assert_recall_contract(oracle, pipe.run(queries))
+
+    def test_descriptor_backend_params_requires_backend(self, dense_data):
+        space, _, corpus, _ = dense_data
+        with pytest.raises(ValueError, match="backendParams"):
+            RetrievalPipeline.from_descriptor(
+                {"backendParams": {"ef": 128}},
+                {"candidate_provider": BruteForceGenerator(space, corpus)})
+
+
+# ---------------------------------------------------------------------------
+# The offline recall contract: dense / sparse / fused x graph_ann / napp.
+# ---------------------------------------------------------------------------
+
+class TestOfflineRecallContract:
+
+    @pytest.mark.parametrize("backend_name", ["graph_ann", "napp"])
+    @pytest.mark.parametrize("space_kind", ["dense", "sparse", "fused"])
+    def test_recall_at_declared_budget(self, space_kind, backend_name,
+                                       dense_data, sparse_data, fused_data):
+        space, queries, corpus, oracle = {
+            "dense": dense_data, "sparse": sparse_data, "fused": fused_data,
+        }[space_kind]
+        backend = resolve_backend(backend_name, space, corpus)
+        assert backend.name == backend_name          # no silent fallback
+        got = backend.topk(space, queries, corpus, K)
+        rec = assert_recall_contract(oracle, got,
+                                     ctx=f"{space_kind}/{backend_name}")
+        assert rec <= 1.0
+
+    def test_k_greater_than_n_valid_gets_reference_tail(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        for name in ("graph_ann", "napp"):
+            got = make_backend(name).topk(space, queries, corpus, 12,
+                                          n_valid=8)
+            assert np.asarray(got.indices)[:, 8:].tolist() == \
+                [[8, 9, 10, 11]] * B
+            assert np.isneginf(np.asarray(got.scores)[:, 8:]).all()
+            assert sorted(np.asarray(got.indices)[0, :8].tolist()) == \
+                list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# jit / vmap parity and the lazy index cache.
+# ---------------------------------------------------------------------------
+
+class TestJitVmapParity:
+
+    @pytest.mark.parametrize("backend_name", ["graph_ann", "napp"])
+    def test_backend_topk_eager_vs_jit_bitwise(self, backend_name,
+                                               dense_data):
+        space, queries, corpus, _ = dense_data
+        backend = make_backend(backend_name)
+        eager = backend.topk(space, queries, corpus, K)
+        jitted = jax.jit(lambda q: backend.topk(space, q, corpus, K))(queries)
+        np.testing.assert_array_equal(np.asarray(eager.indices),
+                                      np.asarray(jitted.indices))
+        np.testing.assert_array_equal(np.asarray(eager.scores),
+                                      np.asarray(jitted.scores))
+
+    def test_beam_search_vmap_chunk_parity(self, dense_data):
+        """Queries are independent rows: vmapping beam_search over query
+        chunks returns exactly the flat-batch result."""
+        space, queries, corpus, _ = dense_data
+        index = graph_ann.nn_descent(space, corpus, N, degree=8, rounds=3,
+                                     key=jax.random.PRNGKey(2))
+        flat = graph_ann.beam_search(space, queries, corpus, index, N,
+                                     k=K, ef=32, hops=6)
+        chunked = jax.vmap(
+            lambda q: graph_ann.beam_search(space, q, corpus, index, N,
+                                            k=K, ef=32, hops=6)
+        )(queries.reshape(2, B // 2, D))
+        np.testing.assert_array_equal(
+            np.asarray(flat.indices),
+            np.asarray(chunked.indices).reshape(B, K))
+        np.testing.assert_array_equal(
+            np.asarray(flat.scores),
+            np.asarray(chunked.scores).reshape(B, K))
+
+    def test_napp_search_vmap_chunk_parity(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        index = napp.build_napp(space, corpus, N, num_pivots=64, num_index=8,
+                                key=jax.random.PRNGKey(3))
+        flat = napp.napp_search(space, queries, corpus, index, k=K,
+                                num_search=8, min_times=1, rerank_qty=128)
+        chunked = jax.vmap(
+            lambda q: napp.napp_search(space, q, corpus, index, k=K,
+                                       num_search=8, min_times=1,
+                                       rerank_qty=128)
+        )(queries.reshape(2, B // 2, D))
+        np.testing.assert_array_equal(
+            np.asarray(flat.indices),
+            np.asarray(chunked.indices).reshape(B, K))
+
+
+class TestIndexCache:
+
+    def test_lazy_build_then_hits(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8)
+        backend.topk(space, queries, corpus, K)
+        first = ann_index_cache_info()
+        assert first["size"] == 1 and first["misses"] == 1
+        backend.topk(space, queries, corpus, K)
+        # a fresh equal-config instance shares the cache entry too (the
+        # seam re-resolves string backends per generate call)
+        GraphANNBackend(rounds=2, degree=8).topk(space, queries, corpus, K)
+        after = ann_index_cache_info()
+        assert after["size"] == 1 and after["hits"] == first["hits"] + 2
+
+    def test_distinct_slices_and_builds_get_distinct_entries(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8)
+        backend.topk(space, queries, corpus, K)
+        backend.topk(space, queries, corpus, K, n_valid=256)
+        dataclasses.replace(backend, seed=7).topk(space, queries, corpus, K)
+        assert ann_index_cache_info()["size"] == 3
+
+    def test_tracer_corpus_bypasses_cache(self, dense_data):
+        space, queries, corpus, oracle = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8)
+        got = jax.jit(lambda q, c: backend.topk(space, q, c, K))(
+            queries, corpus)
+        assert ann_index_cache_info()["size"] == 0   # nothing pinned
+        assert_recall_contract(oracle, got, ctx="tracer-corpus jit")
+
+
+# ---------------------------------------------------------------------------
+# Sharded and served-under-load recall.
+# ---------------------------------------------------------------------------
+
+class TestShardedRecall:
+
+    @pytest.mark.parametrize("backend_name", ["graph_ann", "napp"])
+    def test_per_shard_ann_meets_recall_target(self, backend_name,
+                                               dense_data):
+        space, queries, corpus, oracle = dense_data
+        with ShardedPipeline.from_corpus(
+                space, corpus, 2, backend=backend_name,
+                cand_qty=16, final_qty=K) as sharded:
+            got = sharded.run(queries)
+        assert_recall_contract(oracle, got, ctx=f"sharded/{backend_name}")
+
+
+class TestServedRecall:
+
+    def test_endpoint_recall_under_load_and_identity(self, dense_data):
+        """backend="graph_ann" behind a ContinuousBatcher endpoint: the
+        measured recall target holds under concurrent load, and the
+        snapshot reports the full declared-budget identity."""
+        space, queries, corpus, oracle = dense_data
+        pipe = RetrievalPipeline(generator=BruteForceGenerator(space, corpus),
+                                 cand_qty=32, final_qty=K)
+        pad = jnp.zeros((D,), jnp.float32)
+        with RetrievalService() as svc:
+            svc.register_pipeline("dense_ann", pipe, pad,
+                                  backend="graph_ann", batch_size=8)
+            svc.register_pipeline("dense", pipe, pad, backend="reference",
+                                  batch_size=8)
+            futures = [svc.submit(queries[i % B], endpoint="dense_ann")
+                       for i in range(3 * B)]
+            exact = [svc.submit(queries[i % B], endpoint="dense")
+                     for i in range(B)]
+            got = [f.result(timeout=120) for f in futures]
+            _ = [f.result(timeout=120) for f in exact]
+            snap = svc.snapshot().endpoints
+        assert snap["dense_ann"].backend.startswith("graph_ann(")
+        for token in ("ef=", "hops="):        # budget lands in the label
+            assert token in snap["dense_ann"].backend
+        assert snap["dense"].backend == "reference"
+        rec = mean_recall(np.asarray(oracle.indices)[
+            [i % B for i in range(3 * B)]],
+            [np.asarray(g.indices) for g in got])
+        assert rec >= ANN_RECALL_TARGET, rec
+
+    def test_cache_keys_never_alias_approximate_with_exact(self, dense_data):
+        """Approximate results must not answer exact queries (or vice
+        versa), and two ANN budgets must not answer each other: the
+        backend identity — with every search param — is length-framed
+        into the cache key."""
+        _, queries, _, _ = dense_data
+        cache = QueryCache(capacity=8)
+        q = queries[0]
+        keys = {cache.key("dense", q, backend=ident)
+                for ident in ("reference",
+                              GraphANNBackend().identity,
+                              GraphANNBackend(ef=128).identity,
+                              NappBackend().identity,
+                              NappBackend(num_search=4).identity)}
+        assert len(keys) == 5
