@@ -136,6 +136,42 @@ def planted_cluster_dense(n: int, d: int, b: int, k: int,
     return jnp.asarray(q, jnp.float32), jnp.asarray(c, jnp.float32)
 
 
+def planted_cluster_graph(n: int, degree: int, n_clusters: int = 8):
+    """The exact k-NN graph of :func:`planted_cluster_dense`'s geometry,
+    in closed form — ``GraphIndex`` with ``neighbors`` i32[N, degree].
+
+    Corpus-corpus scores in that construction are ``t_i * t_j`` within a
+    cluster (strictly decreasing in the neighbor's rank ``j``) vs
+    ``|z_i . z_j| <= 1/16`` across clusters, so node ``i``'s true
+    ``degree`` nearest neighbors are exactly its cluster's ``degree``
+    best-ranked members excluding itself: ids ``c + r*C`` for the first
+    ``degree`` ranks ``r != i // C``.  NN-descent converges to this
+    graph (the recall suite runs it at test sizes); building it
+    analytically lets the 10M-row bench traverse the SAME graph the
+    build would produce without paying an O(N * degree^2 * rounds)
+    construction that dwarfs the measurement.  The entry sample is
+    ``nn_descent``-sized but cluster-covering: the graph has no
+    cross-cluster edges (cross-cluster scores are exactly 0), so any
+    cluster the entry set misses is unreachable, and a raw linspace over
+    ids can alias against the round-robin cluster layout (at n = 8192,
+    e = 90 lands on cluster 3 zero times).  Sampling linspace over
+    within-cluster *ranks* with round-robin clusters keeps the spread
+    and guarantees every component an entry."""
+    from repro.core.graph_ann import GraphIndex
+
+    C = n_clusters
+    m = n // C
+    assert n % C == 0 and degree < m, (n, degree, C)
+    k = np.arange(degree, dtype=np.int64)[None, :]
+    ri = (np.arange(n, dtype=np.int64) // C)[:, None]
+    rank = k + (k >= ri)                      # ranks 0.. skipping self
+    nbr = (rank * C + (np.arange(n, dtype=np.int64) % C)[:, None])
+    e = min(n, max(16, int(n ** 0.5)))
+    ranks = np.linspace(0, m - 1, e).astype(np.int64)
+    entry_ids = (ranks * C + np.arange(e, dtype=np.int64) % C).astype(np.int32)
+    return GraphIndex(jnp.asarray(nbr.astype(np.int32)), jnp.asarray(entry_ids))
+
+
 def planted_cluster_fused(n: int, v: int, nnz: int, dd: int, b: int, k: int,
                           n_clusters: int = 8, seed: int = 0):
     """(fused_corpus, fused_queries) planted-cluster data whose sparse

@@ -19,6 +19,17 @@ claims.  ``validate(payload)`` dispatches on ``payload["bench"]``:
     point — the max-budget row of every (space, method) pair meets the
     artifact's declared ``recall_target``.
 
+``beam_ann`` (``BENCH_beam_ann.json``, schema 1)
+    Every *requested* (space, n_docs, path) cell produced exactly one
+    row, each row's identity proves the path it claims (``exact`` rows
+    ran the streaming scan, ``kernel_ann``/``jnp_ann`` rows ran
+    ``graph_ann`` with ``kernel=on``/``off`` — no fallback published
+    under the kernel's name), every ANN row meets the declared
+    ``recall_target`` against the in-run exact oracle, each row's
+    ``speedup_vs_exact`` is consistent with its cell's exact baseline,
+    and — the headline — in ``full`` mode the ``kernel_ann`` rows at
+    the largest corpus meet the declared ``speedup_target``.
+
 Usable as a CLI (exit 1 + message on the first violation) and as a
 library (``validate(payload) -> list_of_errors``) so the test suite can
 guard the committed artifacts against rot::
@@ -47,6 +58,17 @@ ANN_TOP_LEVEL_KEYS = ("bench", "schema", "n_docs", "k", "platform",
 ANN_ROW_KEYS = ("space", "method", "budget", "identity", "recall",
                 "dist_frac", "qps")
 
+BEAM_EXPECTED_SCHEMA = 1
+BEAM_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "k", "platform",
+                       "recall_target", "speedup_target", "requested",
+                       "rows")
+BEAM_ROW_KEYS = ("space", "n_docs", "path", "identity", "ms_per_batch",
+                 "qps", "recall", "speedup_vs_exact")
+# identity must PROVE the path: prefix + required marker substring
+BEAM_PATH_IDENTITY = {"exact": ("streaming(", None),
+                      "kernel_ann": ("graph_ann(", "kernel=on"),
+                      "jnp_ann": ("graph_ann(", "kernel=off")}
+
 
 def _positive_finite(v) -> bool:
     return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
@@ -58,6 +80,8 @@ def validate(payload: dict) -> List[str]:
     bench = payload.get("bench")
     if bench == "ann_tradeoff":
         return _validate_ann_tradeoff(payload)
+    if bench == "beam_ann":
+        return _validate_beam_ann(payload)
     return _validate_serve_backends(payload)
 
 
@@ -189,6 +213,114 @@ def _validate_ann_tradeoff(payload: dict) -> List[str]:
     return errors
 
 
+def _validate_beam_ann(payload: dict) -> List[str]:
+    errors = []
+    for key in BEAM_TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["schema"] != BEAM_EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != "
+                      f"{BEAM_EXPECTED_SCHEMA}")
+    mode = payload["mode"]
+    if mode not in ("full", "smoke"):
+        errors.append(f"mode {mode!r} is not 'full' or 'smoke'")
+        return errors
+    target = payload["recall_target"]
+    if not isinstance(target, (int, float)) or not 0.0 < target <= 1.0:
+        errors.append(f"recall_target {target!r} is not in (0, 1]")
+        return errors
+    speedup_target = payload["speedup_target"]
+    if not _positive_finite(speedup_target):
+        errors.append(f"speedup_target {speedup_target!r} is not a "
+                      "positive finite number")
+        return errors
+    cells = payload["requested"].get("cells")
+    if not cells or not isinstance(cells, list):
+        errors.append("requested.cells missing or empty")
+        return errors
+
+    seen = {}
+    for i, row in enumerate(payload["rows"]):
+        missing = [k for k in BEAM_ROW_KEYS if k not in row]
+        if missing:
+            errors.append(f"rows[{i}] missing keys {missing}")
+            continue
+        cell = (row["space"], row["n_docs"], row["path"])
+        if cell in seen:
+            errors.append(f"rows[{i}] duplicates cell {cell}")
+        seen[cell] = row
+        rule = BEAM_PATH_IDENTITY.get(row["path"])
+        if rule is None:
+            errors.append(f"rows[{i}] unknown path {row['path']!r}")
+        else:
+            prefix, marker = rule
+            ident = str(row["identity"])
+            if not ident.startswith(prefix):
+                errors.append(
+                    f"rows[{i}] identity {ident!r} does not start with "
+                    f"{prefix!r} — the {row['path']!r} row measured a "
+                    "fallback path")
+            if marker is not None and marker not in ident:
+                errors.append(
+                    f"rows[{i}] identity {ident!r} lacks {marker!r} — "
+                    f"the {row['path']!r} row ran the wrong traversal")
+        for k in ("ms_per_batch", "qps", "speedup_vs_exact"):
+            if not _positive_finite(row[k]):
+                errors.append(f"rows[{i}].{k} = {row[k]!r} is not a "
+                              "positive finite number")
+        rec = row["recall"]
+        if not isinstance(rec, (int, float)) or not math.isfinite(rec) \
+                or not 0.0 <= rec <= 1.0:
+            errors.append(f"rows[{i}].recall = {rec!r} is not in [0, 1]")
+        elif row["path"] != "exact" and rec < target:
+            errors.append(
+                f"rows[{i}] ({row['space']}, {row['n_docs']}, "
+                f"{row['path']}) recall {rec} below declared target "
+                f"{target}")
+
+    for cell in cells:
+        if tuple(cell) not in seen:
+            errors.append(f"requested cell {tuple(cell)} never ran")
+    for cell in seen:
+        if list(cell) not in cells:
+            errors.append(f"row cell {cell} was never requested")
+    if errors:
+        return errors
+
+    # speedup must be DERIVED from the same-cell exact baseline, not a
+    # free-floating claim (5% relative + the 2-decimal rounding quantum
+    # covers the rounded ms/speedup fields)
+    for (space, n_docs, path), row in seen.items():
+        exact = seen.get((space, n_docs, "exact"))
+        if exact is None:
+            continue
+        implied = exact["ms_per_batch"] / row["ms_per_batch"]
+        if abs(row["speedup_vs_exact"] - implied) > 0.05 * implied + 0.005:
+            errors.append(
+                f"({space}, {n_docs}, {path}) speedup_vs_exact "
+                f"{row['speedup_vs_exact']} inconsistent with measured "
+                f"ms ratio {implied:.2f}")
+
+    if mode == "full":
+        # the headline gate: kernel traversal beats the exact scan by
+        # the declared factor at the largest measured corpus
+        top_n = max(c[1] for c in cells)
+        gate = [r for (s, n, p), r in seen.items()
+                if n == top_n and p == "kernel_ann"]
+        if not gate:
+            errors.append(f"full mode has no kernel_ann row at the "
+                          f"largest corpus (n={top_n})")
+        for r in gate:
+            if r["speedup_vs_exact"] < speedup_target:
+                errors.append(
+                    f"({r['space']}, {top_n}, kernel_ann) speedup "
+                    f"{r['speedup_vs_exact']}x below declared target "
+                    f"{speedup_target}x")
+    return errors
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else "BENCH_backends.json"
@@ -210,6 +342,14 @@ def main(argv=None) -> int:
         print(f"validate_bench: {path} OK — {n} rows cover the full "
               "requested (space x method x budget) matrix, max-budget "
               f"recall meets target {payload['recall_target']}")
+    elif payload.get("bench") == "beam_ann":
+        gate = ("speedup gate "
+                f"{payload['speedup_target']}x enforced at the largest "
+                "corpus" if payload.get("mode") == "full"
+                else "smoke mode, speedup gate not applicable")
+        print(f"validate_bench: {path} OK — {n} rows cover the full "
+              "requested (space x n_docs x path) matrix, ANN recall "
+              f"meets target {payload['recall_target']}, {gate}")
     else:
         print(f"validate_bench: {path} OK — {n} rows cover the full "
               "requested (space x dtype x backend) matrix, bf16 tier "

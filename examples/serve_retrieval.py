@@ -150,9 +150,12 @@ def build_service(rc, corpus):
     # (NN-descent proximity graph + beam search) — the measured-recall
     # tier: ef must cover the funnel's cand_qty (the backend refuses
     # k > ef rather than silently degrade), the budget-bearing identity
-    # lands in snapshots and cache keys, and main() measures recall vs
-    # the exact "dense" sibling live
-    ann_backend = GraphANNBackend(ef=max(64, rc.cand_qty))
+    # (including kernel=on) lands in snapshots and cache keys, and
+    # main() measures recall vs the exact "dense" sibling live.
+    # kernel=True traverses the graph through the fused Pallas beam
+    # kernel (kernels/beam_topk.py; interpret mode off-TPU) — same
+    # contract, sub-linear per-hop work at corpus scale
+    ann_backend = GraphANNBackend(ef=max(64, rc.cand_qty), kernel=True)
     svc.register_pipeline("dense_ann", dense_pipe, q_dense_all[0],
                           batch_size=16, max_wait_s=0.01,
                           backend=ann_backend)

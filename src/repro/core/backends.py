@@ -596,7 +596,20 @@ class GraphANNBackend:
     silently losing recall.  ``hops=None`` uses the host-side default
     ``max(4, 2·ln N)``.  Governed by the measured-recall tier
     (recall@k ≥ :data:`ANN_RECALL_TARGET` vs the exact oracle), not the
-    exact tiers' bitwise contract — never selected by ``"auto"``."""
+    exact tiers' bitwise contract — never selected by ``"auto"``.
+
+    ``kernel=True`` runs the traversal through the fused Pallas hop
+    kernel (``kernels/beam_topk.py``: per-hop neighbor gather + score +
+    top-``ef`` merge in one on-device pass over a packed visited
+    bitmask; interpret mode off-TPU) instead of the jnp hop loop —
+    same declared budget and recall tier, sub-linear per-hop cost.  The
+    kernel path inherits the Pallas capability matrix (dense ip/l2,
+    sparse ip, fused with dense_kind='ip', contract dtypes): anything
+    the exact kernel refuses, the kernel traversal refuses too, and
+    ``resolve_backend`` falls back to reference.  ``ef * degree`` is
+    additionally capped by the kernel's VMEM candidate budget
+    (``beam_topk.MAX_BEAM_CANDIDATES``) — oversized budgets raise at
+    construction of the search, not inside the kernel."""
 
     degree: int = 16
     rounds: int = 6
@@ -604,6 +617,7 @@ class GraphANNBackend:
     hops: Optional[int] = None
     entry_count: Optional[int] = None
     seed: int = 0
+    kernel: bool = False
     name = "graph_ann"
 
     @property
@@ -612,19 +626,32 @@ class GraphANNBackend:
         entries = "auto" if self.entry_count is None else self.entry_count
         return (f"graph_ann(degree={self.degree},rounds={self.rounds},"
                 f"ef={self.ef},hops={hops},entries={entries},"
-                f"seed={self.seed})")
+                f"seed={self.seed},"
+                f"kernel={'on' if self.kernel else 'off'})")
 
     def supports(self, space, corpus) -> Optional[str]:
         if _rows(corpus) is None:
             return ("graph_ann backend needs a materialized row-major "
                     "corpus (array or pytree of [N, ...] arrays)")
+        if self.kernel:
+            # the kernel traversal scores exactly what the exact Pallas
+            # kernels score — reuse their capability matrix verbatim so
+            # the two tiers can never drift apart
+            why = PallasBackend().supports(space, corpus)
+            if why is not None:
+                return f"graph_ann kernel path: {why}"
         return None
 
     def _index(self, space, corpus, n_valid: int):
         from repro.core import graph_ann as graph_ann_lib
 
         n_total = _rows(corpus)
-        params = (self.degree, self.rounds, self.entry_count, self.seed)
+        # kernel in the key: the graph is layout-identical either way,
+        # but the served LRU must never alias the two traversal paths
+        # (tests pin this — a kernel rollout must not evict/serve via
+        # entries built under the other flag's key)
+        params = (self.degree, self.rounds, self.entry_count, self.seed,
+                  self.kernel)
 
         def build():
             search_corpus = (corpus if n_valid == n_total
@@ -655,10 +682,19 @@ class GraphANNBackend:
         if not k_eff:
             return (_reference_tail(_empty_topk(b), b, k, n_valid)
                     if k else _empty_topk(b))
+        if self.kernel:
+            from repro.kernels.beam_topk import check_beam_budget
+            check_beam_budget(self.ef, self.degree)
         search_corpus, index = self._index(space, corpus, n_valid)
-        head = graph_ann_lib.beam_search(
-            space, query_repr, search_corpus, index, n_valid,
-            k=k_eff, ef=self.ef, hops=self.hops)
+        if self.kernel:
+            interpret = jax.default_backend() != "tpu"
+            head = graph_ann_lib.kernel_beam_search(
+                space, query_repr, search_corpus, index, n_valid,
+                k=k_eff, ef=self.ef, hops=self.hops, interpret=interpret)
+        else:
+            head = graph_ann_lib.beam_search(
+                space, query_repr, search_corpus, index, n_valid,
+                k=k_eff, ef=self.ef, hops=self.hops)
         return (head if k_eff == k
                 else _reference_tail(head, b, k, n_valid))
 

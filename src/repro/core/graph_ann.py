@@ -31,6 +31,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.brute_force import TopK, merge_topk
 from repro.core import spaces as spaces_lib
@@ -41,9 +42,11 @@ __all__ = [
     "gather_items",
     "score_many",
     "nn_descent",
+    "flat_adjacency",
     "default_hops",
     "beam_search",
     "beam_search_early_exit",
+    "kernel_beam_search",
 ]
 
 
@@ -186,6 +189,28 @@ def nn_descent(
     return GraphIndex(neighbors, entry_ids)
 
 
+def flat_adjacency(neighbor_lists, n_items: int, degree: int,
+                   sentinel: int | None = None) -> jax.Array:
+    """Ragged adjacency -> the fixed-degree flat layout ``i32[N, R]``
+    both beam searches traverse: row ``i`` holds ``neighbor_lists[i]``
+    truncated to ``degree`` and padded with ``sentinel`` (default
+    ``n_items`` — the out-of-range id every traversal already masks, so
+    imported graphs with short rows cost masked lanes, never wrong
+    candidates).  This is the import seam for externally built graphs
+    (HNSW exports, exact k-NN graphs): NN-descent emits this layout
+    natively."""
+    if len(neighbor_lists) != n_items:
+        raise ValueError(
+            f"flat_adjacency: {len(neighbor_lists)} rows for "
+            f"{n_items} items")
+    pad = n_items if sentinel is None else sentinel
+    out = np.full((n_items, degree), pad, dtype=np.int32)
+    for i, row in enumerate(neighbor_lists):
+        row = list(row)[:degree]
+        out[i, :len(row)] = row
+    return jnp.asarray(out)
+
+
 # ---------------------------------------------------------------------------
 # Batched beam search (the NSW/HNSW query algorithm, vectorised).
 # ---------------------------------------------------------------------------
@@ -305,3 +330,107 @@ def beam_search_early_exit(
 
     state, _, _ = jax.lax.while_loop(cond, body, (state, -jnp.ones_like(state.beam.indices), 0))
     return merge_topk(state.beam, k)
+
+
+# ---------------------------------------------------------------------------
+# Kernelised beam search: the fused Pallas traversal (kernels/beam_topk.py)
+# behind the same (space, queries, corpus, index) interface.
+# ---------------------------------------------------------------------------
+
+def _components(space, queries, corpus):
+    """(qdensified, q_dense, c_idx, c_val, c_dense, w_dense, w_sparse,
+    dense_kind, vocab) for the kernel call — the same component/weight
+    conventions as ``backends.PallasBackend``'s fused dispatch: only
+    components present on BOTH sides score, absent components carry no
+    weight, a lone SparseSpace part stays unscaled."""
+    from repro.core.sparse import densify
+
+    if isinstance(space, spaces_lib.DenseSpace):
+        return (None, queries, None, None, corpus, None, None, space.kind,
+                None)
+    if isinstance(space, spaces_lib.SparseSpace):
+        qd = densify(queries, space.vocab_size)
+        qd = jnp.pad(qd, ((0, 0), (0, 1)))
+        return (qd, None, corpus.indices, corpus.values, None, None, None,
+                "ip", space.vocab_size)
+    if isinstance(space, spaces_lib.FusedSpace):
+        has_dense = queries.dense is not None and corpus.dense is not None
+        has_sparse = queries.sparse is not None and corpus.sparse is not None
+        qd = c_idx = c_val = None
+        if has_sparse:
+            qd = densify(queries.sparse, space.vocab_size)
+            qd = jnp.pad(qd, ((0, 0), (0, 1)))
+            c_idx, c_val = corpus.sparse.indices, corpus.sparse.values
+        return (qd,
+                queries.dense if has_dense else None,
+                c_idx, c_val,
+                corpus.dense if has_dense else None,
+                space.w_dense if has_dense else None,
+                space.w_sparse if has_sparse else None,
+                space.dense_kind, space.vocab_size)
+    raise TypeError(f"unsupported space {type(space)}")
+
+
+def kernel_beam_search(
+    space,
+    queries,
+    corpus,
+    index: GraphIndex,
+    n_items: int,
+    k: int = 10,
+    ef: int = 64,
+    hops: int | None = None,
+    qb: int | None = None,
+    interpret: bool = True,
+) -> TopK:
+    """``beam_search`` through the fused Pallas traversal kernel.
+
+    Entry-set scoring runs through the exact-scan kernels
+    (``ops.mips_topk`` / ``ops.fused_topk`` over the gathered entry
+    sub-corpus) so the whole search path is on-device; the hop loop is
+    ``kernels.beam_topk.beam_search_pallas`` (per-hop neighbor gather +
+    score + top-``ef`` merge fused, packed visited bitmask).  Same
+    contract as ``beam_search`` — global top-k under the ANN
+    measured-recall tier — with ``_reference_tail`` semantics when the
+    beam cannot fill ``k`` reachable candidates.  Requires a dense /
+    sparse-ip / fused-ip space with array components (the
+    ``GraphANNBackend(kernel=True)`` capability gate routes everything
+    else to the jnp path or the reference backend)."""
+    from repro.kernels import ops
+
+    (qd, q_dense, c_idx, c_val, c_dense, w_dense, w_sparse, dense_kind,
+     vocab) = _components(space, queries, corpus)
+    hops = hops if hops is not None else default_hops(n_items)
+
+    # Coarse entry set, scored with the exact-scan kernels: local top-k0
+    # over the gathered entry sub-corpus, mapped back to global ids.
+    e = int(index.entry_ids.shape[0])
+    entries = gather_items(corpus, index.entry_ids)
+    k0 = min(ef, e)
+    if isinstance(space, spaces_lib.DenseSpace):
+        tk = ops.mips_topk(queries, entries, k0, tile_n=min(2048, e),
+                           space=space.kind, interpret=interpret, n_valid=e)
+    else:
+        q_sparse = (queries if isinstance(space, spaces_lib.SparseSpace)
+                    else queries.sparse if qd is not None else None)
+        e_sparse = (entries if isinstance(space, spaces_lib.SparseSpace)
+                    else entries.sparse if c_idx is not None else None)
+        e_dense = (None if isinstance(space, spaces_lib.SparseSpace)
+                   else entries.dense if c_dense is not None else None)
+        tk = ops.fused_topk(q_sparse, q_dense, e_sparse, e_dense, vocab,
+                            k0, w_dense=w_dense, w_sparse=w_sparse,
+                            dense_kind=dense_kind, tile_n=min(1024, e),
+                            n_valid=e, interpret=interpret)
+    init_s = tk.scores
+    init_ids = index.entry_ids[tk.indices]
+    if k0 < ef:
+        neg = float(jnp.finfo(jnp.float32).min)
+        init_s = jnp.pad(init_s, ((0, 0), (0, ef - k0)),
+                         constant_values=neg)
+        init_ids = jnp.pad(init_ids, ((0, 0), (0, ef - k0)),
+                           constant_values=n_items)
+
+    return ops.beam_topk(qd, q_dense, init_s, init_ids, index.neighbors,
+                         c_idx, c_val, c_dense, k, int(hops), int(n_items),
+                         w_dense=w_dense, w_sparse=w_sparse,
+                         dense_kind=dense_kind, qb=qb, interpret=interpret)

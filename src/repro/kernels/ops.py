@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.brute_force import TopK
 from repro.core.sparse import SparseVectors, densify
+from repro.kernels.beam_topk import (beam_search_pallas, mark_visited,
+                                     visited_words)
 from repro.kernels.fused_topk import fused_topk_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
 from repro.kernels.sparse_dense import fused_score_pallas
@@ -110,3 +112,42 @@ def fused_topk(q_sparse: SparseVectors | None, q_dense: jax.Array | None,
                              w_sparse=w_sparse, tile_n=tile, n_valid=n_valid,
                              dense_kind=dense_kind, interpret=interpret)
     return TopK(s, i)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "hops", "n_valid", "w_dense",
+                                    "w_sparse", "dense_kind", "qb",
+                                    "interpret"))
+def beam_topk(qdensified, q_dense, init_scores, init_ids, neighbors,
+              c_idx, c_val, c_dense, k: int, hops: int, n_valid: int,
+              w_dense=None, w_sparse=None, dense_kind: str = "ip",
+              qb: int | None = None, interpret: bool = True) -> TopK:
+    """Kernelised graph-ANN traversal (``beam_topk.beam_search_pallas``
+    drop-in for ``graph_ann.beam_search`` given a pre-scored entry
+    beam): seeds the packed visited bitmask from the init beam, runs
+    ``hops`` fused hops, and returns the beam's top ``k`` with
+    ``_reference_tail`` semantics for sentinel slots (ids ``n_valid``,
+    ``n_valid+1``, ... with ``-inf`` scores) so a starved beam degrades
+    exactly like the exact backends' degenerate tails.
+
+    ``init_scores``/``init_ids`` [B, ef] must be score-descending with
+    sentinel slots (id >= ``n_valid``) carrying ``NEG`` — the layout
+    ``graph_ann.kernel_beam_search`` builds from the entry set.
+    Components and weights follow ``fused_topk``'s conventions."""
+    b, ef = init_scores.shape
+    if k > ef:
+        raise ValueError(f"beam_topk: k={k} exceeds the beam width "
+                         f"ef={ef}")
+    visited = jnp.zeros((b, visited_words(n_valid)), jnp.uint32)
+    visited = mark_visited(visited, init_ids, n_valid)
+    beam_s, beam_i, _ = beam_search_pallas(
+        qdensified, q_dense, init_scores, init_ids, visited, neighbors,
+        c_idx, c_val, c_dense, n_valid=n_valid, hops=hops,
+        w_dense=w_dense, w_sparse=w_sparse, dense_kind=dense_kind,
+        qb=qb, interpret=interpret)
+    # the beam is fold-sorted descending: its head IS the top-k
+    s, i = beam_s[:, :k], beam_i[:, :k]
+    sent = i >= n_valid
+    i = jnp.where(sent, n_valid + jnp.cumsum(sent, axis=1) - 1, i)
+    s = jnp.where(sent, -jnp.inf, s)
+    return TopK(s, i.astype(jnp.int32))

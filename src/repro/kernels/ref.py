@@ -71,3 +71,79 @@ def fused_topk_ref(q_sparse, q_dense, c_sparse, c_dense, vocab_size: int,
         total = jnp.where(mask, total, -jnp.inf)
     vals, idx = jax.lax.top_k(total, k)
     return vals, idx.astype(jnp.int32)
+
+
+def beam_hop_ref(qdensified, q_dense, beam_s, beam_i, visited, neighbors,
+                 c_idx, c_val, c_dense, *, n_valid: int,
+                 w_dense=None, w_sparse=None, dense_kind: str = "ip"):
+    """Oracle for one ``beam_topk`` hop, restating the traversal spec
+    with independent machinery: the visited set is an *unpacked*
+    ``bool[B, N]`` table (not a bitmask), in-hop dedup is a C x C
+    strictly-lower-triangular equality (any earlier occurrence of the
+    same raw id, valid or not, kills a candidate — matching the kernel's
+    stable-sort formulation), and the beam merge is ``lax.top_k`` over
+    the same ``[beam, candidates]`` concatenation the kernel folds
+    (``_fold_topk`` == ``lax.top_k`` including ties, which both break
+    toward the lower slot).  Scoring reuses the library's einsum
+    groupings so parity with the kernel is bitwise.
+
+    Returns ``(beam_s, beam_i, visited)`` with the new ``bool[B, N]``
+    table (only *scored* candidates marked)."""
+    from repro.kernels.mips_topk import NEG
+
+    b, ef = beam_s.shape
+    n = n_valid
+    c = ef * neighbors.shape[1]
+
+    src_ok = (beam_i >= 0) & (beam_i < n)
+    safe_f = jnp.clip(beam_i, 0, n - 1)
+    cand = neighbors[safe_f].reshape(b, c)
+    cand_ok = (jnp.repeat(src_ok, neighbors.shape[1], axis=1)
+               & (cand >= 0) & (cand < n))
+    safe_c = jnp.clip(cand, 0, n - 1)
+    seen = jax.vmap(lambda v, ids: v[ids])(visited, safe_c) & cand_ok
+
+    eq = cand[:, :, None] == cand[:, None, :]               # [B, C, C]
+    earlier = jnp.tril(jnp.ones((c, c), jnp.bool_), k=-1)   # j < i
+    dup = jnp.any(eq & earlier[None, :, :], axis=2)
+
+    valid = cand_ok & ~seen & ~dup
+
+    parts, weights = [], []
+    if c_dense is not None:
+        q = q_dense.astype(jnp.float32)
+        items = c_dense[safe_c].astype(jnp.float32)         # [B, C, Dd]
+        dense = jnp.einsum("qd,qcd->qc", q, items,
+                           preferred_element_type=jnp.float32)
+        if dense_kind == "l2":
+            q2 = jnp.einsum("qd,qd->q", q, q)[:, None]
+            c2 = jnp.einsum("qcd,qcd->qc", items, items)
+            dense = -(q2 + c2 - 2.0 * dense)
+        parts.append(dense)
+        weights.append(w_dense)
+    if c_idx is not None:
+        qd = qdensified.astype(jnp.float32)
+        idx = c_idx[safe_c]                                 # [B, C, NNZ]
+        val = c_val[safe_c].astype(jnp.float32)
+        picked = jax.vmap(lambda qrow, irow: qrow[irow])(qd, idx)
+        parts.append(jnp.einsum("qck,qck->qc", picked, val))
+        weights.append(w_sparse)
+    if not parts:
+        raise ValueError("beam_hop_ref: no components to score")
+    if any(w is not None for w in weights):
+        total = jnp.einsum("...c,c->...", jnp.stack(parts, axis=-1),
+                           jnp.asarray(weights, jnp.float32))
+    else:
+        total = parts[0]
+
+    s = jnp.where(valid, total, NEG)
+    cand_ids = jnp.where(valid, cand, n)
+
+    cat_s = jnp.concatenate([beam_s, s], axis=1)
+    cat_i = jnp.concatenate([beam_i, cand_ids], axis=1)
+    new_s, pos = jax.lax.top_k(cat_s, ef)
+    new_i = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    new_visited = jax.vmap(lambda v, ids, ok: v.at[ids].max(ok))(
+        visited, safe_c, valid)
+    return new_s, new_i.astype(jnp.int32), new_visited

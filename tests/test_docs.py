@@ -227,3 +227,136 @@ class TestAnnBenchArtifact:
         assert any("recall" in e and "[0, 1]" in e for e in errors)
         assert any("dist_frac" in e for e in errors)
         assert any("qps" in e for e in errors)
+
+
+class TestBeamAnnBenchArtifact:
+    """BENCH_beam_ann.json (kernel beam traversal vs exact scan) must
+    satisfy the beam_ann schema CI's benchmark smoke job enforces —
+    same synthetic-reference pattern as the classes above, plus this
+    artifact's two distinguishing gates: every ANN row meets the
+    declared recall target, and in full mode the kernel rows at the
+    largest corpus meet the declared speedup target, with every
+    ``speedup_vs_exact`` claim re-derived from the in-artifact exact
+    baseline rather than trusted."""
+
+    KERNEL_IDENT = ("graph_ann(degree=16,rounds=0,ef=64,hops=4,"
+                    "entries=auto,seed=0,kernel=on)")
+    JNP_IDENT = ("graph_ann(degree=16,rounds=0,ef=64,hops=4,"
+                 "entries=auto,seed=0,kernel=off)")
+
+    def _payload(self, mode="full"):
+        # exact baselines scale with n; the kernel path does not — the
+        # largest-corpus kernel row clears the 10x gate (120/8 = 15)
+        ms = {("exact", 1024): 12.0, ("exact", 4096): 120.0,
+              ("kernel_ann", 1024): 8.0, ("kernel_ann", 4096): 8.0,
+              ("jnp_ann", 1024): 6.0, ("jnp_ann", 4096): 60.0}
+        idents = {"exact": "streaming(tile_n=auto)",
+                  "kernel_ann": self.KERNEL_IDENT,
+                  "jnp_ann": self.JNP_IDENT}
+        cells = [[s, n, p] for s in ("dense-ip", "sparse")
+                 for n in (1024, 4096)
+                 for p in ("exact", "kernel_ann", "jnp_ann")]
+        rows = [{"space": s, "n_docs": n, "path": p,
+                 "identity": idents[p],
+                 "ms_per_batch": ms[(p, n)],
+                 "qps": 32 / (ms[(p, n)] / 1e3),
+                 "recall": 1.0 if p == "exact" else 0.97,
+                 "speedup_vs_exact": round(ms[("exact", n)] / ms[(p, n)], 2)}
+                for s, n, p in cells]
+        return {"bench": "beam_ann", "schema": 1, "mode": mode, "k": 10,
+                "n_queries": 32, "platform": "cpu",
+                "recall_target": 0.95, "speedup_target": 10.0,
+                "requested": {"cells": cells}, "rows": rows}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+
+    def test_local_artifact_validates_when_current(self):
+        from benchmarks.validate_bench import BEAM_EXPECTED_SCHEMA, validate
+        path = REPO / "BENCH_beam_ann.json"
+        if not path.exists():
+            pytest.skip("no local beam-ANN benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != BEAM_EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/beam_ann.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_missing_and_unrequested_cells(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        dropped = payload["rows"].pop()
+        errors = validate(payload)
+        assert any("never ran" in e and dropped["path"] in e
+                   for e in errors)
+        payload = copy.deepcopy(self._payload())
+        extra = copy.deepcopy(payload["rows"][0])
+        extra["n_docs"] = 99999
+        payload["rows"].append(extra)
+        assert any("never requested" in e for e in validate(payload))
+
+    def test_validator_rejects_fallback_identity(self):
+        """A kernel row whose identity is the reference backend's (or
+        the jnp traversal's) measured the wrong path — both the prefix
+        and the kernel=on marker are enforced."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"] if r["path"] == "kernel_ann")
+        row["identity"] = "reference"
+        assert any("fallback" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"] if r["path"] == "kernel_ann")
+        row["identity"] = self.JNP_IDENT
+        assert any("wrong traversal" in e for e in validate(payload))
+
+    def test_validator_rejects_low_ann_recall(self):
+        """Unlike ann_tradeoff's max-budget-only gate, EVERY beam_ann
+        ANN row runs at the declared budget, so every one must meet the
+        recall target."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"]
+                   if r["path"] == "jnp_ann" and r["n_docs"] == 1024)
+        row["recall"] = 0.8
+        assert any("below declared target" in e for e in validate(payload))
+
+    def test_validator_rejects_low_speedup_in_full_mode_only(self):
+        from benchmarks.validate_bench import validate
+        slow = copy.deepcopy(self._payload())
+        for r in slow["rows"]:
+            if r["path"] == "kernel_ann" and r["n_docs"] == 4096:
+                r["ms_per_batch"] = 60.0
+                r["speedup_vs_exact"] = 2.0
+        assert any("below declared target 10.0x" in e
+                   for e in validate(slow))
+        smoke = copy.deepcopy(self._payload(mode="smoke"))
+        for r in smoke["rows"]:
+            if r["path"] == "kernel_ann" and r["n_docs"] == 4096:
+                r["ms_per_batch"] = 60.0
+                r["speedup_vs_exact"] = 2.0
+        assert validate(smoke) == []
+
+    def test_validator_rejects_inconsistent_speedup_claim(self):
+        """speedup_vs_exact is re-derived from the exact baseline's
+        ms_per_batch — a free-floating 15x claim over ms that imply 2x
+        is a violation even though 15 clears the gate."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        row = next(r for r in payload["rows"]
+                   if r["path"] == "kernel_ann" and r["n_docs"] == 4096)
+        row["ms_per_batch"] = 60.0
+        row["speedup_vs_exact"] = 15.0
+        assert any("inconsistent" in e for e in validate(payload))
+
+    def test_validator_rejects_bad_numbers_and_mode(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["ms_per_batch"] = 0.0
+        payload["rows"][1]["recall"] = -0.1
+        errors = validate(payload)
+        assert any("ms_per_batch" in e for e in errors)
+        assert any("recall" in e and "[0, 1]" in e for e in errors)
+        bad_mode = copy.deepcopy(self._payload())
+        bad_mode["mode"] = "partial"
+        assert any("mode" in e for e in validate(bad_mode))

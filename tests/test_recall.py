@@ -33,7 +33,8 @@ from repro.core.spaces import DenseSpace, FusedSpace, SparseSpace
 from repro.serving.cache import QueryCache
 from repro.serving.service import RetrievalService
 from repro.serving.sharded import ShardedPipeline
-from tests._recall import (assert_recall_contract, mean_recall,
+from tests._recall import (RECALL_KS, assert_budget_boundary,
+                           assert_recall_contract, mean_recall, oracle_at_k,
                            oracle_margin, planted_cluster_corpus,
                            planted_cluster_fused_corpus)
 
@@ -251,19 +252,40 @@ class TestBackendRegistration:
 
 class TestOfflineRecallContract:
 
+    @pytest.mark.parametrize("k", RECALL_KS)
     @pytest.mark.parametrize("backend_name", ["graph_ann", "napp"])
     @pytest.mark.parametrize("space_kind", ["dense", "sparse", "fused"])
-    def test_recall_at_declared_budget(self, space_kind, backend_name,
+    def test_recall_at_declared_budget(self, space_kind, backend_name, k,
                                        dense_data, sparse_data, fused_data):
+        """recall@k is not monotone in k (finding the top-10 set does
+        not imply finding the single best), so the contract is gated at
+        each k in RECALL_KS against the sliced oracle."""
         space, queries, corpus, oracle = {
             "dense": dense_data, "sparse": sparse_data, "fused": fused_data,
         }[space_kind]
         backend = resolve_backend(backend_name, space, corpus)
         assert backend.name == backend_name          # no silent fallback
-        got = backend.topk(space, queries, corpus, K)
-        rec = assert_recall_contract(oracle, got,
-                                     ctx=f"{space_kind}/{backend_name}")
+        got = backend.topk(space, queries, corpus, k)
+        assert got.indices.shape == (B, k)
+        rec = assert_recall_contract(oracle_at_k(oracle, k), got,
+                                     ctx=f"{space_kind}/{backend_name}@{k}")
         assert rec <= 1.0
+
+    @pytest.mark.parametrize("kernel", [False, True])
+    def test_k_equals_ef_boundary(self, kernel, dense_data):
+        """The k == ef boundary point of the k-parametrization: the
+        declared budget is inclusive — exactly ef distinct candidates
+        come back — and ef + 1 raises (regression for the contractual
+        k > ef ValueError)."""
+        space, queries, corpus, _ = dense_data
+        ef = 16
+        backend = GraphANNBackend(ef=ef, rounds=2, degree=8, kernel=kernel)
+        assert_budget_boundary(backend, space, queries, corpus, budget=ef)
+
+    def test_rerank_qty_boundary(self, dense_data):
+        space, queries, corpus, _ = dense_data
+        backend = NappBackend(rerank_qty=12, num_search=16, min_times=1)
+        assert_budget_boundary(backend, space, queries, corpus, budget=12)
 
     def test_k_greater_than_n_valid_gets_reference_tail(self, dense_data):
         space, queries, corpus, _ = dense_data
@@ -363,6 +385,67 @@ class TestIndexCache:
             queries, corpus)
         assert ann_index_cache_info()["size"] == 0   # nothing pinned
         assert_recall_contract(oracle, got, ctx="tracer-corpus jit")
+
+    def test_kernel_flag_keys_distinct_entries(self, dense_data):
+        """The kernel flag is part of the cache key: a kernel rollout
+        must never serve (or evict) through entries built under the
+        other traversal path's key, even though the graph itself is
+        layout-identical."""
+        space, queries, corpus, oracle = dense_data
+        clear_ann_index_cache()
+        jnp_path = GraphANNBackend(rounds=2, degree=8)
+        kern_path = dataclasses.replace(jnp_path, kernel=True)
+        got_jnp = jnp_path.topk(space, queries, corpus, K)
+        got_kern = kern_path.topk(space, queries, corpus, K)
+        assert ann_index_cache_info()["size"] == 2
+        # and each flag hits its OWN entry on re-search
+        jnp_path.topk(space, queries, corpus, K)
+        kern_path.topk(space, queries, corpus, K)
+        info = ann_index_cache_info()
+        assert info["size"] == 2 and info["hits"] == 2
+        assert_recall_contract(oracle, got_jnp, ctx="cache/jnp")
+        assert_recall_contract(oracle, got_kern, ctx="cache/kernel")
+
+    def test_concurrent_builds_one_entry_per_key(self, dense_data):
+        """Racing first searches on a cold cache: builds run outside the
+        lock (deterministic in their key), so concurrency may cost
+        duplicate build time but must end with exactly one cached index
+        per key and every result identical."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        space, queries, corpus, _ = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8, kernel=True)
+        with ThreadPoolExecutor(max_workers=6) as ex:
+            futures = [ex.submit(backend.topk, space, queries, corpus, K)
+                       for _ in range(6)]
+            results = [f.result() for f in futures]
+        assert ann_index_cache_info()["size"] == 1
+        base = np.asarray(results[0].indices)
+        for r in results[1:]:
+            np.testing.assert_array_equal(np.asarray(r.indices), base)
+
+    def test_clear_during_inflight_search_is_safe(self, dense_data):
+        """clear_ann_index_cache concurrent with searches: the searcher
+        holds its own (corpus, index) reference once _index returns, so
+        clearing mid-flight may only force rebuilds — never a wrong or
+        crashed result."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        space, queries, corpus, oracle = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8, kernel=True)
+
+        def search(_):
+            return backend.topk(space, queries, corpus, K)
+
+        with ThreadPoolExecutor(max_workers=4) as ex:
+            futures = [ex.submit(search, i) for i in range(12)]
+            for _ in range(24):
+                clear_ann_index_cache()
+            results = [f.result(timeout=300) for f in futures]
+        for got in results:
+            assert_recall_contract(oracle, got, ctx="clear-in-flight")
 
 
 # ---------------------------------------------------------------------------
