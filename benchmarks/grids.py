@@ -1,0 +1,40 @@
+"""The hand-picked sweep grids, shared between benchmarks.
+
+``serve_bench.py`` sweeps these grids directly; ``autotune_pareto.py``
+measures the same (batch, deadline, cache) grid as its baseline and
+seeds the evolutionary archive with it.  One definition means the
+autotuner's "beats the best hand-picked grid point" gate can never
+drift from what serve_bench actually measures.
+"""
+
+from __future__ import annotations
+
+# -- serve_bench sweep grids (full preset) ----------------------------------
+BATCH_SIZES = (4, 16, 64)
+DEADLINES_S = (0.002, 0.01)
+CACHE_SIZES = (0, 4096)
+SHARD_COUNTS = (1, 2, 4)
+OVERLOAD_POLICIES = ("reject", "shed_oldest")
+BACKENDS = ("reference", "streaming", "pallas")
+DTYPES = ("float32", "bfloat16")
+SPACES = ("dense", "fused")
+
+# -- smoke-preset shrinkage (CI smoke jobs on shared runners) ---------------
+SMOKE_BATCH_SIZES = (4, 16)
+SMOKE_DEADLINES_S = (0.002,)
+SMOKE_SHARD_COUNTS = (1, 2)
+
+
+def serve_grid_configs(smoke: bool = False):
+    """serve_bench's hand-picked (batch, deadline, cache) frontier grid
+    as :class:`~repro.serving.autotune.ServingConfig` genomes — the
+    autotuner's measured baseline and seed population.  Mirrors
+    ``serve_bench.run_config``'s registration exactly: the plain
+    reference funnel, unbounded block admission, f32 residency."""
+    from repro.serving.autotune import ServingConfig
+
+    batches = SMOKE_BATCH_SIZES if smoke else BATCH_SIZES
+    deadlines = SMOKE_DEADLINES_S if smoke else DEADLINES_S
+    return [ServingConfig(backend="reference", batch_size=b,
+                          max_wait_s=dl, cache_size=c)
+            for b in batches for dl in deadlines for c in CACHE_SIZES]

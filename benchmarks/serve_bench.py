@@ -45,6 +45,10 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import planted_margin_dense, planted_margin_fused
+from benchmarks.grids import (BACKENDS, BATCH_SIZES, CACHE_SIZES,
+                              DEADLINES_S, DTYPES, OVERLOAD_POLICIES,
+                              SHARD_COUNTS, SMOKE_BATCH_SIZES,
+                              SMOKE_DEADLINES_S, SMOKE_SHARD_COUNTS, SPACES)
 from repro.core.brute_force import exact_topk
 from repro.core.fusion import require_bf16_margin, topk_recall
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
@@ -58,14 +62,10 @@ DIM = 64
 UNIQUE_QUERIES = 256
 HOT_QUERIES = 16          # hot set receiving HOT_TRAFFIC of the stream
 HOT_TRAFFIC = 0.5
-BATCH_SIZES = (4, 16, 64)
-DEADLINES_S = (0.002, 0.01)
-SHARD_COUNTS = (1, 2, 4)
-OVERLOAD_POLICIES = ("reject", "shed_oldest")
+# sweep grids live in benchmarks/grids.py (imported above), shared with
+# the autotuner's seed population so the "beats the best grid point"
+# gate in BENCH_pareto.json can't drift from what this bench measures
 OVERLOAD_DEPTH = 32       # admission-queue bound during the flood
-BACKENDS = ("reference", "streaming", "pallas")
-DTYPES = ("float32", "bfloat16")
-SPACES = ("dense", "fused")
 BENCH_SCHEMA = 2          # bumped when BENCH_backends.json's shape changes
 FUSED_VOCAB = 512
 FUSED_NNZ = 16
@@ -73,8 +73,10 @@ FUSED_REQUESTS = 96       # the fused reference path is heavier per query
 
 # --preset smoke: the tiny CI preset — same code paths and assertions,
 # small enough for a benchmark smoke job on a shared runner
-SMOKE_OVERRIDES = dict(N_DOCS=1024, UNIQUE_QUERIES=64, BATCH_SIZES=(4, 16),
-                       DEADLINES_S=(0.002,), SHARD_COUNTS=(1, 2),
+SMOKE_OVERRIDES = dict(N_DOCS=1024, UNIQUE_QUERIES=64,
+                       BATCH_SIZES=SMOKE_BATCH_SIZES,
+                       DEADLINES_S=SMOKE_DEADLINES_S,
+                       SHARD_COUNTS=SMOKE_SHARD_COUNTS,
                        FUSED_REQUESTS=32)
 
 
@@ -374,7 +376,7 @@ def main():
     cache_cmp = {}
     for batch in BATCH_SIZES:
         for dl in DEADLINES_S:
-            for cache in (0, 4096):
+            for cache in CACHE_SIZES:
                 r = run_config(pipe, queries, warmup_queries, workload,
                                batch_size=batch, deadline_s=dl,
                                cache_size=cache)

@@ -30,6 +30,18 @@ claims.  ``validate(payload)`` dispatches on ``payload["bench"]``:
     and — the headline — in ``full`` mode the ``kernel_ann`` rows at
     the largest corpus meet the declared ``speedup_target``.
 
+``pareto`` (``BENCH_pareto.json``, schema 1)
+    The autotuner's bookkeeping adds up (``pruned + measured ==
+    generated``), every grid/front row's endpoint identity starts with
+    its genome's backend (no fallback published under a tuned genome's
+    name) and its served dtype matches the genome, the published front
+    really is mutually non-dominated AND not dominated by any hand-
+    picked grid row (re-derived from the rows, not trusted), and — in
+    ``full`` mode — the two headline gates hold: some front row strictly
+    beats the best grid point (qps or p99, at equal-or-better recall)
+    and the roofline proxy pruned at least the declared fraction of
+    generated candidates.
+
 Usable as a CLI (exit 1 + message on the first violation) and as a
 library (``validate(payload) -> list_of_errors``) so the test suite can
 guard the committed artifacts against rot::
@@ -69,6 +81,14 @@ BEAM_PATH_IDENTITY = {"exact": ("streaming(", None),
                       "kernel_ann": ("graph_ann(", "kernel=on"),
                       "jnp_ann": ("graph_ann(", "kernel=off")}
 
+PARETO_EXPECTED_SCHEMA = 1
+PARETO_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "n_docs", "dim", "k",
+                         "requests", "seed", "platform", "objectives",
+                         "prune_fraction_target", "counts", "grid",
+                         "front")
+PARETO_ROW_KEYS = ("config", "backend", "identity", "corpus_dtype",
+                   "qps", "p50_ms", "p99_ms", "recall")
+
 
 def _positive_finite(v) -> bool:
     return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
@@ -82,6 +102,8 @@ def validate(payload: dict) -> List[str]:
         return _validate_ann_tradeoff(payload)
     if bench == "beam_ann":
         return _validate_beam_ann(payload)
+    if bench == "pareto":
+        return _validate_pareto(payload)
     return _validate_serve_backends(payload)
 
 
@@ -321,6 +343,154 @@ def _validate_beam_ann(payload: dict) -> List[str]:
     return errors
 
 
+def _pareto_objectives(row) -> tuple:
+    """Maximization vector re-derived from a row — must match
+    ``MeasuredPoint.objectives``: (qps, -p99_ms, recall)."""
+    return (row["qps"], -row["p99_ms"], row["recall"])
+
+
+def _pareto_dominates(a: tuple, b: tuple) -> bool:
+    return all(x >= y for x, y in zip(a, b)) and \
+        any(x > y for x, y in zip(a, b))
+
+
+def _check_pareto_row(row, i: int, where: str, errors: List[str]) -> bool:
+    """Shape + honesty checks shared by grid and front rows."""
+    missing = [k for k in PARETO_ROW_KEYS if k not in row]
+    if missing:
+        errors.append(f"{where}[{i}] missing keys {missing}")
+        return False
+    config = row["config"]
+    if not isinstance(config, dict) or not config.get("backend"):
+        errors.append(f"{where}[{i}].config is not a genome mapping")
+        return False
+    if row["backend"] != config["backend"]:
+        errors.append(f"{where}[{i}].backend {row['backend']!r} != "
+                      f"config.backend {config['backend']!r}")
+    if not str(row["identity"]).startswith(row["backend"]):
+        errors.append(
+            f"{where}[{i}] identity {row['identity']!r} does not start "
+            f"with backend {row['backend']!r} — the row measured a "
+            "fallback path")
+    if row["corpus_dtype"] != config.get("corpus_dtype"):
+        errors.append(
+            f"{where}[{i}] served corpus_dtype {row['corpus_dtype']!r} "
+            f"!= genome dtype {config.get('corpus_dtype')!r}")
+    ok = True
+    if not _positive_finite(row["qps"]):
+        errors.append(f"{where}[{i}].qps = {row['qps']!r} is not a "
+                      "positive finite number")
+        ok = False
+    for k in ("p50_ms", "p99_ms"):
+        v = row[k]
+        if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                or v < 0:
+            errors.append(f"{where}[{i}].{k} = {v!r} is not a "
+                          "non-negative finite number")
+            ok = False
+    if ok and row["p99_ms"] < row["p50_ms"]:
+        errors.append(f"{where}[{i}] p99_ms {row['p99_ms']} < p50_ms "
+                      f"{row['p50_ms']}")
+    rec = row["recall"]
+    if not isinstance(rec, (int, float)) or not math.isfinite(rec) \
+            or not 0.0 <= rec <= 1.0:
+        errors.append(f"{where}[{i}].recall = {rec!r} is not in [0, 1]")
+        ok = False
+    return ok
+
+
+def _validate_pareto(payload: dict) -> List[str]:
+    errors = []
+    for key in PARETO_TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["schema"] != PARETO_EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != "
+                      f"{PARETO_EXPECTED_SCHEMA}")
+    mode = payload["mode"]
+    if mode not in ("full", "smoke"):
+        errors.append(f"mode {mode!r} is not 'full' or 'smoke'")
+        return errors
+    if list(payload["objectives"]) != ["qps", "p99_ms", "recall"]:
+        errors.append(f"objectives {payload['objectives']!r} != "
+                      "['qps', 'p99_ms', 'recall']")
+    target = payload["prune_fraction_target"]
+    if not isinstance(target, (int, float)) or not 0.0 < target < 1.0:
+        errors.append(f"prune_fraction_target {target!r} is not in "
+                      "(0, 1)")
+        return errors
+
+    # the measurement bill must add up: every generated candidate was
+    # either proxy-pruned or load-tested, nothing double-counted
+    counts = payload["counts"]
+    for key in ("generated", "measured", "pruned"):
+        v = counts.get(key)
+        if not isinstance(v, int) or v < 0:
+            errors.append(f"counts.{key} = {v!r} is not a non-negative "
+                          "integer")
+            return errors
+    if counts["pruned"] + counts["measured"] != counts["generated"]:
+        errors.append(
+            f"counts do not add up: pruned {counts['pruned']} + measured "
+            f"{counts['measured']} != generated {counts['generated']}")
+    if not payload["grid"]:
+        errors.append("grid is empty — no hand-picked baseline measured")
+    if not payload["front"]:
+        errors.append("front is empty")
+    if errors:
+        return errors
+
+    grid_ok = [row for i, row in enumerate(payload["grid"])
+               if _check_pareto_row(row, i, "grid", errors)]
+    front_ok = [row for i, row in enumerate(payload["front"])
+                if _check_pareto_row(row, i, "front", errors)]
+    if len(grid_ok) != len(payload["grid"]) \
+            or len(front_ok) != len(payload["front"]):
+        return errors
+
+    # the published front must actually BE a Pareto front: mutually
+    # non-dominated, and not dominated by any hand-picked grid row
+    front_objs = [_pareto_objectives(r) for r in front_ok]
+    grid_objs = [_pareto_objectives(r) for r in grid_ok]
+    for i, a in enumerate(front_objs):
+        for j, b in enumerate(front_objs):
+            if i != j and _pareto_dominates(b, a):
+                errors.append(f"front[{i}] is dominated by front[{j}] — "
+                              "not a Pareto front")
+        for j, b in enumerate(grid_objs):
+            if _pareto_dominates(b, a):
+                errors.append(f"front[{i}] is dominated by grid[{j}] — "
+                              "the archive seeding lost to its own "
+                              "baseline")
+
+    if mode == "full":
+        # headline gate 1: some front row strictly beats the best grid
+        # point — higher qps than the grid's best-qps row at >= its
+        # recall, or lower p99 than the grid's best-p99 row at >= its
+        # recall (re-derived from the rows, same rule as the driver)
+        by_qps = max(grid_ok, key=lambda r: r["qps"])
+        by_p99 = min(grid_ok, key=lambda r: r["p99_ms"])
+        beats = any(
+            (r["qps"] > by_qps["qps"] and r["recall"] >= by_qps["recall"])
+            or (r["p99_ms"] < by_p99["p99_ms"]
+                and r["recall"] >= by_p99["recall"])
+            for r in front_ok)
+        if not beats:
+            errors.append(
+                f"full mode: no front row beats the best grid point "
+                f"(qps {by_qps['qps']} @ recall {by_qps['recall']}, "
+                f"p99 {by_p99['p99_ms']} @ recall {by_p99['recall']})")
+        # headline gate 2: the roofline proxy really carried its weight
+        frac = counts["pruned"] / counts["generated"]
+        if frac < target:
+            errors.append(
+                f"full mode: proxy pruned only {frac:.2f} of generated "
+                f"candidates, below declared target {target}")
+    return errors
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     path = argv[0] if argv else "BENCH_backends.json"
@@ -337,6 +507,14 @@ def main(argv=None) -> int:
         for e in errors:
             print(f"  - {e}", file=sys.stderr)
         return 1
+    if payload.get("bench") == "pareto":
+        gate = ("domination + prune gates enforced"
+                if payload.get("mode") == "full"
+                else "smoke mode, headline gates not applicable")
+        print(f"validate_bench: {path} OK — {len(payload['front'])} "
+              f"front rows over {len(payload['grid'])} grid baselines, "
+              f"front re-derived as non-dominated, counts add up, {gate}")
+        return 0
     n = len(payload["rows"])
     if payload.get("bench") == "ann_tradeoff":
         print(f"validate_bench: {path} OK — {n} rows cover the full "

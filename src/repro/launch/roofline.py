@@ -49,6 +49,46 @@ def topk_tile_seconds(tile_n: int, *, b: int, k: int, bytes_per_row: float,
     memory = (bytes_per_row * tile_n) / HBM_BW
     return max(compute, memory)
 
+def serving_scan_seconds(n_rows: int, *, b: int, k: int, bytes_per_row: float,
+                         flops_per_row: float, tile_n: Optional[int] = None,
+                         n_shards: int = 1) -> float:
+    """Roofline seconds for one batched exact top-k scan over a corpus of
+    ``n_rows``, extended to the whole serving config: the corpus is split
+    across ``n_shards`` (scanned in parallel, so the scan term is the
+    slowest shard), each shard is streamed in ``tile_n``-row tiles
+    (``topk_tile_seconds`` per tile), and the per-shard top-k lists are
+    merged on one device afterwards (a ``[B, K * n_shards]`` sort-select,
+    charged to the VPU).  ``bytes_per_row`` already reflects the corpus
+    residency dtype, so the dtype knob flows through here for free."""
+    if n_rows <= 0:
+        return 0.0
+    n_shards = max(1, int(n_shards))
+    shard_rows = -(-n_rows // n_shards)          # ceil
+    if tile_n is None or tile_n <= 0:
+        tile_n = min(shard_rows, 8192)
+    tile_n = min(tile_n, shard_rows)
+    n_tiles = -(-shard_rows // tile_n)
+    scan = n_tiles * topk_tile_seconds(tile_n, b=b, k=k,
+                                       bytes_per_row=bytes_per_row,
+                                       flops_per_row=flops_per_row)
+    merge = (b * k * n_shards * (k + 1.0)) / PEAK_FLOPS if n_shards > 1 else 0.0
+    return scan + merge
+
+
+def serving_visit_seconds(n_visits: float, *, b: int, bytes_per_row: float,
+                          flops_per_visit: float) -> float:
+    """Roofline seconds for a batched graph-ANN traversal that scores
+    ``n_visits`` candidates per query.  Unlike the dense scan, candidate
+    rows are gathered (not streamed), so every visit pays the full
+    ``bytes_per_row`` from HBM with no tile amortization; compute is the
+    per-candidate distance (``flops_per_visit``) plus the beam fold."""
+    if n_visits <= 0:
+        return 0.0
+    compute = (b * n_visits * flops_per_visit) / PEAK_FLOPS
+    memory = (b * n_visits * bytes_per_row) / HBM_BW
+    return max(compute, memory)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

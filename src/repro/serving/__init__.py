@@ -2,6 +2,11 @@
 -> (optionally sharded) pipeline -> cache -> stats.  See README.md in this
 package and docs/ARCHITECTURE.md for the full map."""
 
+from repro.serving.autotune import (AutotuneResult, MeasuredPoint,
+                                    ServingConfig, TunedProfile, autotune,
+                                    check_config, measure_config,
+                                    pareto_front, proxy_objectives,
+                                    roofline_prune)
 from repro.serving.batcher import (OVERLOAD_POLICIES, ContinuousBatcher,
                                    Request, ServiceOverloaded)
 from repro.serving.cache import QueryCache, quantized_key
@@ -27,4 +32,14 @@ __all__ = [
     "ServiceSnapshot",
     "EndpointSnapshot",
     "LatencySummary",
+    "ServingConfig",
+    "TunedProfile",
+    "MeasuredPoint",
+    "AutotuneResult",
+    "autotune",
+    "check_config",
+    "measure_config",
+    "pareto_front",
+    "proxy_objectives",
+    "roofline_prune",
 ]

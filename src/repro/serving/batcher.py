@@ -161,6 +161,7 @@ class ContinuousBatcher:
         overload: str = "block",
         backend: Optional[str] = None,
         corpus_dtype: Optional[str] = None,
+        profile: Optional[str] = None,
         stats: Optional[ServingStats] = None,
         on_result: Optional[Callable[[Request, Any], None]] = None,
         time_fn: Callable[[], float] = time.monotonic,
@@ -182,6 +183,9 @@ class ContinuousBatcher:
         # never alias)
         self.backend = backend
         self.corpus_dtype = corpus_dtype
+        # tuned-profile tag (TunedProfile.tag) when this endpoint's knobs
+        # came from an autotuned profile: provenance in snapshots + keys
+        self.profile = profile
         self.stats = stats if stats is not None else ServingStats()
         self.on_result = on_result
         self._time_fn = time_fn
@@ -191,7 +195,8 @@ class ContinuousBatcher:
             target=self._loop, name=f"batcher-{name}", daemon=True)
         self.stats.register_endpoint(name, self._queue.qsize,
                                      depth_limit=max_queue, backend=backend,
-                                     corpus_dtype=corpus_dtype)
+                                     corpus_dtype=corpus_dtype,
+                                     profile=profile)
         self._thread.start()
 
     # -- client side --------------------------------------------------------

@@ -43,9 +43,10 @@ def _framed(h, data: bytes):
 
 def quantized_key(endpoint: str, query: Any, decimals: int = 6,
                   backend: Optional[str] = None,
-                  corpus_dtype: Optional[str] = None) -> bytes:
+                  corpus_dtype: Optional[str] = None,
+                  profile: Optional[str] = None) -> bytes:
     """Stable digest of (endpoint, backend identity, corpus residency
-    dtype, quantized query).
+    dtype, tuned-profile tag, quantized query).
 
     Float leaves are rounded to ``decimals``; integer leaves (token ids,
     sparse indices) are hashed exactly.  Leaf shapes and dtypes are folded
@@ -53,11 +54,13 @@ def quantized_key(endpoint: str, query: Any, decimals: int = 6,
     ``corpus_dtype`` is keyed exactly like ``backend``: a bf16 endpoint's
     scores are a different precision tier than an f32 endpoint's over the
     same corpus, and the two must never answer from each other's
-    entries."""
+    entries.  ``profile`` (a ``TunedProfile.tag``) keys autotuned
+    endpoints' entries by provenance the same way."""
     h = hashlib.blake2b(digest_size=16)
     _framed(h, endpoint.encode())
     _framed(h, (backend or "").encode())
     _framed(h, (corpus_dtype or "").encode())
+    _framed(h, (profile or "").encode())
     for leaf in jax.tree.leaves(query):
         a = np.asarray(leaf)
         if np.issubdtype(a.dtype, np.floating):
@@ -84,9 +87,11 @@ class QueryCache:
 
     def key(self, endpoint: str, query: Any,
             backend: Optional[str] = None,
-            corpus_dtype: Optional[str] = None) -> bytes:
+            corpus_dtype: Optional[str] = None,
+            profile: Optional[str] = None) -> bytes:
         return quantized_key(endpoint, query, self.decimals,
-                             backend=backend, corpus_dtype=corpus_dtype)
+                             backend=backend, corpus_dtype=corpus_dtype,
+                             profile=profile)
 
     def get(self, key: bytes) -> Optional[Any]:
         with self._lock:

@@ -128,6 +128,7 @@ class RetrievalService:
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
         backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
+        profile: Optional[Any] = None,
     ) -> "RetrievalService":
         """``backend`` (a name, identity string, or ExecutionBackend
         instance) declares the execution path behind ``run_fn``;
@@ -135,7 +136,26 @@ class RetrievalService:
         precision tier).  Both are surfaced in stats snapshots and keyed
         into this endpoint's cache entries.  For opaque runners they are
         labels only — the runner is not rewritten (use
-        :meth:`register_pipeline` for that)."""
+        :meth:`register_pipeline` for that).
+
+        ``profile`` (a :class:`~repro.serving.autotune.TunedProfile`)
+        binds the endpoint's batching/admission knobs — batch size,
+        deadline, queue bound, overload policy — from an autotuned
+        Pareto-front row in one shot, and declares the profile's backend
+        identity and corpus dtype when no explicit labels are given.
+        The profile's ``tag`` is surfaced in snapshots and folded into
+        this endpoint's cache keys (provenance).  Note
+        ``profile.config.cache_size`` is a *service*-level knob — pass
+        it to the :class:`RetrievalService` constructor."""
+        if profile is not None:
+            batch_size = profile.config.batch_size
+            max_wait_s = profile.config.max_wait_s
+            max_queue = profile.config.max_queue
+            overload = profile.config.overload
+            if backend is None:
+                backend = profile.config.make_backend()
+            if corpus_dtype is None:
+                corpus_dtype = profile.config.corpus_dtype
         if jit:
             run_fn = jax.jit(run_fn)
         batcher = ContinuousBatcher(
@@ -144,6 +164,7 @@ class RetrievalService:
             max_queue=max_queue, overload=overload,
             backend=backend_identity(backend),
             corpus_dtype=corpus_dtype,
+            profile=None if profile is None else profile.tag,
             stats=self.stats, on_result=self._on_result,
             time_fn=self._time_fn)
         self.router.register(batcher)
@@ -155,6 +176,7 @@ class RetrievalService:
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
         backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
+        profile: Optional[Any] = None,
     ) -> "RetrievalService":
         """Serve a :class:`RetrievalPipeline` (or
         :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
@@ -174,7 +196,35 @@ class RetrievalService:
         cache keys.  A pipeline without the corresponding seam (no
         ``with_backend`` / ``with_corpus_dtype``) is rejected here — use
         :meth:`register_runner` for label-only declarations, so stats
-        never claim a path that is not actually executing."""
+        never claim a path that is not actually executing.
+
+        ``profile`` (a :class:`~repro.serving.autotune.TunedProfile`)
+        rebinds backend, corpus dtype, batching and admission control
+        from an autotuned Pareto-front row in one shot — mutually
+        exclusive with explicit ``backend``/``corpus_dtype`` (a profile
+        IS those choices; overriding half of one silently would serve a
+        point nobody measured).  The pipeline's shard count must match
+        the profile's genome for the same reason.  The profile tag lands
+        in snapshots and cache keys; ``profile.config.cache_size`` is a
+        service-level knob (the :class:`RetrievalService` constructor)."""
+        if profile is not None:
+            if backend is not None or corpus_dtype is not None:
+                raise ValueError(
+                    "profile= supplies backend and corpus_dtype; passing "
+                    "them explicitly alongside a profile would serve a "
+                    "config the profile never measured")
+            n_shards = getattr(pipeline, "n_shards", 1)
+            if n_shards != profile.config.n_shards:
+                raise ValueError(
+                    f"profile was tuned for n_shards="
+                    f"{profile.config.n_shards} but the pipeline has "
+                    f"{n_shards} shard(s)")
+            backend = profile.config.make_backend()
+            corpus_dtype = profile.config.corpus_dtype
+            batch_size = profile.config.batch_size
+            max_wait_s = profile.config.max_wait_s
+            max_queue = profile.config.max_queue
+            overload = profile.config.overload
         original = pipeline
         if corpus_dtype is not None:
             if not hasattr(pipeline, "with_corpus_dtype"):
@@ -213,7 +263,7 @@ class RetrievalService:
             name, run_fn, pad_query_repr, pad_q_tokens,
             batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
             max_queue=max_queue, overload=overload, backend=label,
-            corpus_dtype=dtype_label)
+            corpus_dtype=dtype_label, profile=profile)
 
     def endpoints(self):
         return self.router.endpoints()
@@ -238,7 +288,8 @@ class RetrievalService:
         if self.cache is not None:
             key = self.cache.key(batcher.name, (query_repr, q_tokens),
                                  backend=batcher.backend,
-                                 corpus_dtype=batcher.corpus_dtype)
+                                 corpus_dtype=batcher.corpus_dtype,
+                                 profile=batcher.profile)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record_cache(True)

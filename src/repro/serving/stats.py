@@ -87,6 +87,17 @@ class EndpointSnapshot:
     # None = opaque runner / no dtype declared) — the precision tier a
     # latency or quality delta should be attributed to
     corpus_dtype: Optional[str] = None
+    # tuned-profile tag when the endpoint was registered with
+    # register_pipeline(profile=...) / register_runner(profile=...) —
+    # provenance for every number above (None = hand-configured)
+    profile: Optional[str] = None
+    # process-wide warm-cache counters at snapshot time ({size, hits,
+    # misses}): the pallas tile auto-tune cache and the ANN index LRU.
+    # Shared across endpoints (the caches are module-level), surfaced
+    # here so the autotuner — and operators — can tell a warm
+    # measurement from one paying cold builds/tuning sweeps.
+    tile_cache: Optional[Dict[str, int]] = None
+    ann_index_cache: Optional[Dict[str, int]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +145,7 @@ class ServingStats:
         self._depth_limits: Dict[str, int] = {}
         self._backends: Dict[str, str] = {}
         self._corpus_dtypes: Dict[str, str] = {}
+        self._profiles: Dict[str, str] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -142,7 +154,8 @@ class ServingStats:
                           depth_fn: Optional[Callable[[], int]] = None,
                           depth_limit: Optional[int] = None,
                           backend: Optional[str] = None,
-                          corpus_dtype: Optional[str] = None):
+                          corpus_dtype: Optional[str] = None,
+                          profile: Optional[str] = None):
         with self._lock:
             self._endpoints.setdefault(name, _EndpointStats(name))
             if depth_fn is not None:
@@ -153,6 +166,8 @@ class ServingStats:
                 self._backends[name] = backend
             if corpus_dtype is not None:
                 self._corpus_dtypes[name] = corpus_dtype
+            if profile is not None:
+                self._profiles[name] = profile
 
     def _ep(self, name: str) -> _EndpointStats:
         return self._endpoints.setdefault(name, _EndpointStats(name))
@@ -202,6 +217,13 @@ class ServingStats:
 
     # -- read path ----------------------------------------------------------
     def snapshot(self) -> ServiceSnapshot:
+        # outside the lock: the warm-cache counters have their own locks,
+        # and backends is a lazy import so stats stays numpy-only until a
+        # snapshot is actually taken
+        from repro.core.backends import ann_index_cache_info, tile_cache_info
+
+        tile_cache = tile_cache_info()
+        ann_cache = ann_index_cache_info()
         with self._lock:
             endpoints = {}
             total = 0
@@ -227,6 +249,9 @@ class ServingStats:
                     shed=ep.overload["shed"],
                     backend=self._backends.get(name),
                     corpus_dtype=self._corpus_dtypes.get(name),
+                    profile=self._profiles.get(name),
+                    tile_cache=tile_cache,
+                    ann_index_cache=ann_cache,
                 )
                 total += ep.n_requests
             return ServiceSnapshot(

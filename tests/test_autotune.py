@@ -1,0 +1,366 @@
+"""Autotuner: genome legality, NSGA machinery, roofline proxy, seeded
+determinism, and tuned-profile registration round-trip."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # bare install: seeded parametrized fallback
+    from _proptest import given, settings, st
+
+from repro.core.backends import StreamingBackend
+from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
+from repro.core.spaces import DenseSpace
+from repro.serving import RetrievalService
+from repro.serving.autotune import (MeasuredPoint, ServingConfig,
+                                    TunedProfile, autotune, check_config,
+                                    crossover, crowding_distance, dominates,
+                                    measure_config, mutate,
+                                    nondominated_sort, pareto_front,
+                                    proxy_objectives, random_config,
+                                    roofline_prune)
+
+
+# ---------------------------------------------------------------------------
+# Genome legality: operators never emit an illegal knob combination.
+# ---------------------------------------------------------------------------
+
+class TestGenomeLegality:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16))
+    def test_random_config_always_legal(self, seed, k):
+        rng = np.random.default_rng(seed)
+        cfg = random_config(rng, k)
+        assert check_config(cfg, k) is None
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16))
+    def test_mutation_chain_stays_legal(self, seed, k):
+        rng = np.random.default_rng(seed)
+        cfg = random_config(rng, k)
+        for _ in range(8):
+            cfg = mutate(cfg, rng, k)
+            assert check_config(cfg, k) is None, check_config(cfg, k)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 16))
+    def test_crossover_stays_legal(self, seed, k):
+        rng = np.random.default_rng(seed)
+        a, b = random_config(rng, k), random_config(rng, k)
+        child = crossover(a, b, rng, k)
+        assert check_config(child, k) is None
+
+    def test_out_of_scope_knobs_rejected(self):
+        k = 10
+        assert check_config(
+            ServingConfig(backend="reference", tile_n=512), k) is not None
+        assert check_config(
+            ServingConfig(backend="reference", ef=64), k) is not None
+        assert check_config(
+            ServingConfig(backend="streaming", num_search=8), k) is not None
+
+    def test_budget_bounds_rejected(self):
+        assert check_config(
+            ServingConfig(backend="graph_ann", ef=16), k=32) is not None
+        assert check_config(
+            ServingConfig(backend="napp", num_search=8, rerank_qty=64),
+            k=128) is not None
+        assert check_config(ServingConfig(backend="graph_ann"),
+                            k=10) is not None   # ef budget undeclared
+
+    def test_queue_starvation_rejected(self):
+        cfg = ServingConfig(batch_size=64, max_queue=32)
+        assert "starves" in check_config(cfg, 10)
+        assert check_config(
+            ServingConfig(batch_size=32, max_queue=32), 10) is None
+
+    def test_ann_sharding_rejected(self):
+        cfg = ServingConfig(backend="graph_ann", ef=64, n_shards=2)
+        assert check_config(cfg, 10) is not None
+
+    def test_unknown_backend_rejected(self):
+        assert check_config(ServingConfig(backend="nope"), 10) is not None
+
+
+# ---------------------------------------------------------------------------
+# NSGA machinery: domination, fronts, crowding.
+# ---------------------------------------------------------------------------
+
+class TestNondominated:
+    def test_dominates_definition(self):
+        assert dominates((2.0, 1.0), (1.0, 1.0))
+        assert not dominates((1.0, 1.0), (1.0, 1.0))     # equal: neither
+        assert not dominates((2.0, 0.5), (1.0, 1.0))     # trade-off
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_front_zero_is_exactly_the_nondominated_set(self, seed):
+        rng = np.random.default_rng(seed)
+        objs = [tuple(rng.integers(0, 5, 3).tolist()) for _ in range(24)]
+        fronts = nondominated_sort(objs)
+        brute = {i for i in range(len(objs))
+                 if not any(dominates(objs[j], objs[i])
+                            for j in range(len(objs)))}
+        assert set(fronts[0]) == brute
+        assert sorted(i for f in fronts for i in f) == list(range(len(objs)))
+
+    def test_crowding_keeps_boundary_points(self):
+        objs = [(0.0, 3.0), (1.0, 2.0), (2.0, 1.0), (3.0, 0.0)]
+        dist = crowding_distance(objs, [0, 1, 2, 3])
+        assert dist[0] == float("inf") and dist[3] == float("inf")
+        assert dist[1] < float("inf") and dist[2] < float("inf")
+
+    def test_pareto_front_filters_measured_points(self):
+        mk = lambda qps, p99, rec: MeasuredPoint(
+            config=ServingConfig(), qps=qps, p50_ms=1.0, p99_ms=p99,
+            recall=rec, identity="reference")
+        a = mk(100.0, 5.0, 1.0)
+        b = mk(50.0, 5.0, 1.0)      # dominated by a
+        c = mk(80.0, 2.0, 1.0)      # trade-off with a
+        front = pareto_front([a, b, c])
+        assert a in front and c in front and b not in front
+        assert front[0].qps >= front[-1].qps
+
+    def test_roofline_prune_respects_budget_and_counts(self):
+        rng = np.random.default_rng(0)
+        configs = [random_config(rng, 10) for _ in range(20)]
+        kept, n_pruned = roofline_prune(configs, 5, n_docs=4096, dim=64,
+                                        k=10)
+        assert len(kept) == 5 and n_pruned == 15
+        kept2, n2 = roofline_prune(configs[:3], 5, n_docs=4096, dim=64,
+                                   k=10)
+        assert len(kept2) == 3 and n2 == 0
+
+
+# ---------------------------------------------------------------------------
+# Roofline proxy: a rank signal with the right monotonicities.
+# ---------------------------------------------------------------------------
+
+class TestProxy:
+    def _obj(self, cfg, **kw):
+        args = dict(n_docs=4096, dim=64, k=10)
+        args.update(kw)
+        return proxy_objectives(cfg, **args)
+
+    def test_latency_monotone_in_deadline(self):
+        fast = self._obj(ServingConfig(max_wait_s=0.0005))
+        slow = self._obj(ServingConfig(max_wait_s=0.01))
+        assert fast[1] > slow[1]        # -latency: bigger is better
+
+    def test_bounded_queue_cuts_proxy_latency(self):
+        unbounded = self._obj(ServingConfig(batch_size=16))
+        bounded = self._obj(ServingConfig(batch_size=16, max_queue=32))
+        assert bounded[1] > unbounded[1]
+
+    def test_cache_scales_qps_with_repeats(self):
+        cold = self._obj(ServingConfig(cache_size=4096), repeat_fraction=0.0)
+        warm = self._obj(ServingConfig(cache_size=4096), repeat_fraction=0.5)
+        uncached = self._obj(ServingConfig(cache_size=0),
+                             repeat_fraction=0.5)
+        assert warm[0] > cold[0]
+        assert warm[0] > uncached[0]
+
+    def test_ann_recall_monotone_in_budget(self):
+        tight = self._obj(ServingConfig(backend="graph_ann", ef=16))
+        loose = self._obj(ServingConfig(backend="graph_ann", ef=128))
+        exact = self._obj(ServingConfig(backend="reference"))
+        assert tight[2] < loose[2] < exact[2] == 1.0
+
+    def test_ann_proxy_faster_than_scan_at_scale(self):
+        ann = self._obj(ServingConfig(backend="graph_ann", ef=32),
+                        n_docs=10_000_000)
+        scan = self._obj(ServingConfig(backend="reference"),
+                         n_docs=10_000_000)
+        assert ann[0] > scan[0]
+
+
+# ---------------------------------------------------------------------------
+# The evolution loop: deterministic, bookkeeping adds up.
+# ---------------------------------------------------------------------------
+
+def _fake_measure(cfg: ServingConfig):
+    """Deterministic stand-in for a load test: proxy objectives dressed
+    up as a measurement."""
+    qps, neg_lat, recall = proxy_objectives(cfg, n_docs=4096, dim=64, k=10)
+    return MeasuredPoint(config=cfg, qps=qps, p50_ms=-neg_lat * 500.0,
+                         p99_ms=-neg_lat * 1000.0, recall=recall,
+                         identity=cfg.backend)
+
+
+class TestAutotuneLoop:
+    def test_seeded_run_is_deterministic(self):
+        kw = dict(k=10, n_docs=4096, dim=64, seed=7, generations=2,
+                  population=10, measure_budget=3)
+        r1 = autotune(_fake_measure, **kw)
+        r2 = autotune(_fake_measure, **kw)
+        assert [p.config for p in r1.archive] == \
+            [p.config for p in r2.archive]
+        assert [p.config for p in r1.front] == [p.config for p in r2.front]
+        assert r1.counts == r2.counts
+
+    def test_counts_add_up_and_front_nondominated(self):
+        r = autotune(_fake_measure, k=10, n_docs=4096, dim=64, seed=3,
+                     generations=2, population=8, measure_budget=3)
+        c = r.counts
+        assert c["pruned"] + c["measured"] == c["generated"]
+        assert r.front
+        objs = [p.objectives() for p in r.archive]
+        for p in r.front:
+            assert not any(dominates(o, p.objectives()) for o in objs)
+
+    def test_seed_points_survive_into_archive(self):
+        seed_cfg = ServingConfig(batch_size=4)
+        seed_point = _fake_measure(seed_cfg)
+        r = autotune(_fake_measure, k=10, n_docs=4096, dim=64, seed=0,
+                     generations=1, population=4, measure_budget=2,
+                     seed_points=[seed_point])
+        assert seed_point in r.archive
+        assert r.counts["generated"] >= 1 + 4
+
+    def test_unmeasurable_configs_are_skipped(self):
+        r = autotune(lambda cfg: None, k=10, n_docs=4096, dim=64, seed=0,
+                     generations=1, population=4, measure_budget=2)
+        assert r.archive == [] and r.front == []
+        assert r.counts["measured"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Proxy vs. measured: the rank signal orders a real grid correctly.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestProxyVsMeasured:
+    def test_proxy_qps_rank_matches_measured_on_batch_axis(self):
+        """Batch amortization is the proxy's strongest, most measurable
+        claim: bigger batches amortize the fixed per-batch overhead, so
+        proxy qps rank over the batch axis must match a real load test."""
+        from benchmarks.common import planted_cluster_dense
+        from repro.core.brute_force import exact_topk
+
+        n_docs, dim, k, uniq = 512, 32, 5, 32
+        space = DenseSpace("ip")
+        queries, corpus = planted_cluster_dense(n_docs, dim, uniq + 16, k)
+        warm, queries = queries[uniq:], queries[:uniq]
+        oracle = np.asarray(exact_topk(space, queries, corpus, k).indices)
+        workload = np.arange(64) % uniq
+        cfgs = [ServingConfig(batch_size=b, max_wait_s=0.002)
+                for b in (1, 4, 32)]
+        measured = []
+        for cfg in cfgs:
+            p = measure_config(cfg, space=space, corpus=corpus,
+                               queries=queries, warmup_queries=warm,
+                               workload=workload, k=k,
+                               oracle_indices=oracle, check_n=8,
+                               repeats=3)
+            assert p is not None and p.recall == 1.0
+            measured.append(p.qps)
+        proxy = [proxy_objectives(c, n_docs=n_docs, dim=dim, k=k)[0]
+                 for c in cfgs]
+        assert np.argsort(proxy).tolist() == np.argsort(measured).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Tuned profiles: serialization + registration round-trip.
+# ---------------------------------------------------------------------------
+
+class TestTunedProfile:
+    def test_json_round_trip_and_stable_tag(self):
+        p = TunedProfile(config=ServingConfig(backend="streaming",
+                                              tile_n=256, batch_size=8),
+                         qps=123.4, p99_ms=5.6, recall=1.0,
+                         identity="streaming(tile_n=256)")
+        q = TunedProfile.from_json(p.to_json())
+        assert q == p
+        assert q.tag == p.tag and q.tag.startswith("profile:")
+        # the tag keys the genome, not the measurements
+        r = dataclasses.replace(p, qps=999.0)
+        assert r.tag == p.tag
+        assert dataclasses.replace(
+            p, config=ServingConfig(batch_size=9)).tag != p.tag
+
+    def test_from_point_carries_measurements(self):
+        point = MeasuredPoint(config=ServingConfig(), qps=10.0, p50_ms=1.0,
+                              p99_ms=2.0, recall=0.9, identity="reference")
+        prof = TunedProfile.from_point(point)
+        assert prof.qps == 10.0 and prof.recall == 0.9
+        assert prof.source == "autotune"
+
+
+class TestProfileRegistration:
+    @pytest.fixture(scope="class")
+    def dense_setup(self):
+        rng = np.random.default_rng(0)
+        corpus = np.asarray(rng.normal(size=(256, 16)), np.float32)
+        queries = np.asarray(rng.normal(size=(20, 16)), np.float32)
+        return DenseSpace("ip"), corpus, queries
+
+    def _pipe(self, space, corpus):
+        return RetrievalPipeline(BruteForceGenerator(space, corpus),
+                                 cand_qty=20, final_qty=10)
+
+    def test_profile_bit_identical_to_explicit_kwargs(self, dense_setup):
+        space, corpus, queries = dense_setup
+        cfg = ServingConfig(backend="streaming", tile_n=64,
+                            corpus_dtype="bfloat16", batch_size=8,
+                            max_wait_s=0.005)
+        profile = TunedProfile(config=cfg, identity="streaming(tile_n=64)")
+
+        svc_p = RetrievalService()
+        svc_p.register_pipeline("dense", self._pipe(space, corpus),
+                                queries[0], profile=profile)
+        with svc_p:
+            res_p = svc_p.retrieve(list(queries), endpoint="dense")
+            snap_p = svc_p.snapshot()
+
+        svc_e = RetrievalService()
+        svc_e.register_pipeline("dense", self._pipe(space, corpus),
+                                queries[0], batch_size=8, max_wait_s=0.005,
+                                backend=StreamingBackend(tile_n=64),
+                                corpus_dtype="bfloat16")
+        with svc_e:
+            res_e = svc_e.retrieve(list(queries), endpoint="dense")
+            snap_e = svc_e.snapshot()
+
+        assert np.array_equal(np.stack([r.scores for r in res_p]),
+                              np.stack([r.scores for r in res_e]))
+        assert np.array_equal(np.stack([r.indices for r in res_p]),
+                              np.stack([r.indices for r in res_e]))
+        ep_p, ep_e = snap_p.endpoints["dense"], snap_e.endpoints["dense"]
+        assert ep_p.backend == ep_e.backend == "streaming(tile_n=64)"
+        assert ep_p.corpus_dtype == ep_e.corpus_dtype == "bfloat16"
+        # provenance: only the profile-registered endpoint carries the tag
+        assert ep_p.profile == profile.tag
+        assert ep_e.profile is None
+
+    def test_profile_conflicts_with_explicit_kwargs(self, dense_setup):
+        space, corpus, queries = dense_setup
+        profile = TunedProfile(config=ServingConfig())
+        svc = RetrievalService()
+        with pytest.raises(ValueError, match="profile"):
+            svc.register_pipeline("dense", self._pipe(space, corpus),
+                                  queries[0], profile=profile,
+                                  backend=StreamingBackend())
+        svc.close()
+
+    def test_profile_shard_mismatch_rejected(self, dense_setup):
+        space, corpus, queries = dense_setup
+        profile = TunedProfile(config=ServingConfig(n_shards=2))
+        svc = RetrievalService()
+        with pytest.raises(ValueError, match="n_shards"):
+            svc.register_pipeline("dense", self._pipe(space, corpus),
+                                  queries[0], profile=profile)
+        svc.close()
+
+    def test_profile_tag_in_cache_key(self, dense_setup):
+        """Two endpoints differing only in profile provenance must never
+        alias each other's cache entries."""
+        from repro.serving.cache import quantized_key
+        space, corpus, queries = dense_setup
+        k_plain = quantized_key("e", queries[0], backend="reference",
+                                corpus_dtype="float32")
+        k_prof = quantized_key("e", queries[0], backend="reference",
+                               corpus_dtype="float32",
+                               profile="profile:abc")
+        assert k_plain != k_prof

@@ -360,3 +360,121 @@ class TestBeamAnnBenchArtifact:
         bad_mode = copy.deepcopy(self._payload())
         bad_mode["mode"] = "partial"
         assert any("mode" in e for e in validate(bad_mode))
+
+
+class TestParetoBenchArtifact:
+    """BENCH_pareto.json (the autotuner's measured Pareto front over the
+    serving config space) must satisfy the pareto schema CI's benchmark
+    smoke job enforces — same synthetic-reference pattern as the classes
+    above, plus this artifact's distinguishing gates: the published
+    front is re-derived as non-dominated (mutually AND against the
+    hand-picked grid baselines), the prune/measure bookkeeping adds up,
+    and in full mode the front must strictly beat the best grid point
+    with the proxy pruning at least the declared fraction."""
+
+    def _row(self, *, backend="reference", qps, p99, recall=1.0,
+             dtype="float32", **genome):
+        config = {"backend": backend, "tile_n": None,
+                  "corpus_dtype": dtype, "n_shards": 1, "batch_size": 16,
+                  "max_wait_s": 0.002, "cache_size": 0, "max_queue": None,
+                  "overload": "block", "ef": None, "hops": None,
+                  "kernel": False, "num_search": None, "rerank_qty": None}
+        config.update(genome)
+        return {"config": config, "backend": backend, "identity": backend,
+                "corpus_dtype": dtype, "qps": qps, "p50_ms": p99 / 2,
+                "p99_ms": p99, "recall": recall}
+
+    def _payload(self, mode="full"):
+        grid = [self._row(qps=1000.0, p99=10.0),
+                self._row(qps=800.0, p99=8.0, cache_size=4096),
+                self._row(qps=500.0, p99=20.0, batch_size=64)]
+        front = [self._row(qps=1500.0, p99=12.0, batch_size=32),
+                 self._row(qps=900.0, p99=6.0, max_queue=32,
+                           overload="reject")]
+        return {"bench": "pareto", "schema": 1, "mode": mode,
+                "n_docs": 4096, "dim": 64, "k": 10, "requests": 512,
+                "seed": 0, "platform": "cpu",
+                "objectives": ["qps", "p99_ms", "recall"],
+                "prune_fraction_target": 0.5,
+                "counts": {"generated": 100, "measured": 30,
+                           "pruned": 70},
+                "grid": grid, "front": front}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+        assert validate(self._payload(mode="smoke")) == []
+
+    def test_local_artifact_validates_when_current(self):
+        from benchmarks.validate_bench import (PARETO_EXPECTED_SCHEMA,
+                                               validate)
+        path = REPO / "BENCH_pareto.json"
+        if not path.exists():
+            pytest.skip("no local pareto benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != PARETO_EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/autotune_pareto.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_bad_counts(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["counts"]["pruned"] = 60
+        assert any("do not add up" in e for e in validate(payload))
+
+    def test_validator_rejects_dominated_front(self):
+        """A 'front' containing a dominated row is not a Pareto front —
+        both the mutual check and the against-grid check must fire."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["front"].append(self._row(qps=100.0, p99=50.0))
+        errors = validate(payload)
+        assert any("dominated by front" in e for e in errors)
+        payload = copy.deepcopy(self._payload())
+        payload["front"] = [self._row(qps=700.0, p99=9.0,
+                                      cache_size=1024)]
+        assert any("dominated by grid" in e for e in validate(payload))
+
+    def test_validator_rejects_fallback_identity(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["front"][0]["config"]["backend"] = "pallas"
+        payload["front"][0]["backend"] = "pallas"
+        assert any("fallback" in e for e in validate(payload))
+
+    def test_validator_rejects_dtype_mismatch(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["grid"][0]["corpus_dtype"] = "bfloat16"
+        assert any("genome dtype" in e for e in validate(payload))
+
+    def test_full_mode_requires_front_to_beat_grid(self):
+        """A front that merely ties the grid fails the full-mode gate
+        but passes in smoke mode (where the gate is not applicable)."""
+        from benchmarks.validate_bench import validate
+        tie = copy.deepcopy(self._payload())
+        tie["front"] = [copy.deepcopy(tie["grid"][0]),
+                        copy.deepcopy(tie["grid"][1])]
+        assert any("beats the best grid point" in e for e in validate(tie))
+        tie["mode"] = "smoke"
+        assert validate(tie) == []
+
+    def test_full_mode_requires_prune_fraction(self):
+        from benchmarks.validate_bench import validate
+        lazy = copy.deepcopy(self._payload())
+        lazy["counts"] = {"generated": 100, "measured": 80, "pruned": 20}
+        assert any("below declared target" in e for e in validate(lazy))
+        lazy["mode"] = "smoke"
+        assert validate(lazy) == []
+
+    def test_validator_rejects_bad_numbers(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["grid"][0]["qps"] = 0.0
+        payload["grid"][1]["recall"] = 1.5
+        payload["front"][0]["p99_ms"] = 1.0   # below its p50 of 6.0
+        errors = validate(payload)
+        assert any("qps" in e for e in errors)
+        assert any("recall" in e and "[0, 1]" in e for e in errors)
+        assert any("p99_ms" in e and "p50_ms" in e for e in errors)
