@@ -30,6 +30,16 @@ claims.  ``validate(payload)`` dispatches on ``payload["bench"]``:
     and — the headline — in ``full`` mode the ``kernel_ann`` rows at
     the largest corpus meet the declared ``speedup_target``.
 
+``live_churn`` (``BENCH_live.json``, schema 1)
+    Every *requested* (write_rate, compact_interval) cell produced
+    exactly one row, each row's identity starts with the requested
+    backend (the live endpoint really served through it), qps and
+    latency/freshness numbers are sane, every row's post-compaction
+    recall meets the declared ``recall_target`` (churn + compaction did
+    not corrupt the served state), and the generation bookkeeping is
+    coherent (``generation_final >= compactions >= 1`` — the cell
+    really mutated and really compacted).
+
 ``pareto`` (``BENCH_pareto.json``, schema 1)
     The autotuner's bookkeeping adds up (``pruned + measured ==
     generated``), every grid/front row's endpoint identity starts with
@@ -81,6 +91,16 @@ BEAM_PATH_IDENTITY = {"exact": ("streaming(", None),
                       "kernel_ann": ("graph_ann(", "kernel=on"),
                       "jnp_ann": ("graph_ann(", "kernel=off")}
 
+LIVE_EXPECTED_SCHEMA = 1
+LIVE_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "n_docs", "dim", "k",
+                       "requests", "platform", "recall_target",
+                       "requested", "rows")
+LIVE_ROW_KEYS = ("write_rate", "compact_interval", "identity", "qps",
+                 "p50_ms", "p99_ms", "snapshot_age_p99_ms",
+                 "post_compaction_recall", "mutations",
+                 "generation_final", "compactions", "tombstones_final")
+LIVE_NUMERIC_ROW_KEYS = ("qps", "p50_ms", "p99_ms", "snapshot_age_p99_ms")
+
 PARETO_EXPECTED_SCHEMA = 1
 PARETO_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "n_docs", "dim", "k",
                          "requests", "seed", "platform", "objectives",
@@ -102,6 +122,8 @@ def validate(payload: dict) -> List[str]:
         return _validate_ann_tradeoff(payload)
     if bench == "beam_ann":
         return _validate_beam_ann(payload)
+    if bench == "live_churn":
+        return _validate_live_churn(payload)
     if bench == "pareto":
         return _validate_pareto(payload)
     return _validate_serve_backends(payload)
@@ -343,6 +365,98 @@ def _validate_beam_ann(payload: dict) -> List[str]:
     return errors
 
 
+def _validate_live_churn(payload: dict) -> List[str]:
+    errors = []
+    for key in LIVE_TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["schema"] != LIVE_EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != "
+                      f"{LIVE_EXPECTED_SCHEMA}")
+    mode = payload["mode"]
+    if mode not in ("full", "smoke"):
+        errors.append(f"mode {mode!r} is not 'full' or 'smoke'")
+        return errors
+    target = payload["recall_target"]
+    if not isinstance(target, (int, float)) or not 0.0 < target <= 1.0:
+        errors.append(f"recall_target {target!r} is not in (0, 1]")
+        return errors
+    requested = payload["requested"]
+    backend = requested.get("backend")
+    if not backend or not isinstance(backend, str):
+        errors.append("requested.backend missing or not a string")
+    for axis in ("write_rates", "compact_intervals"):
+        if not requested.get(axis):
+            errors.append(f"requested.{axis} missing or empty")
+    if errors:
+        return errors
+
+    seen = {}
+    for i, row in enumerate(payload["rows"]):
+        missing = [k for k in LIVE_ROW_KEYS if k not in row]
+        if missing:
+            errors.append(f"rows[{i}] missing keys {missing}")
+            continue
+        cell = (row["write_rate"], row["compact_interval"])
+        if cell in seen:
+            errors.append(f"rows[{i}] duplicates cell {cell}")
+        seen[cell] = row
+        if not str(row["identity"]).startswith(backend):
+            errors.append(
+                f"rows[{i}] identity {row['identity']!r} does not start "
+                f"with requested backend {backend!r} — the row measured "
+                "a fallback path")
+        for k in LIVE_NUMERIC_ROW_KEYS:
+            if not _positive_finite(row[k]):
+                errors.append(f"rows[{i}].{k} = {row[k]!r} is not a "
+                              "positive finite number")
+        rec = row["post_compaction_recall"]
+        if not isinstance(rec, (int, float)) or not math.isfinite(rec) \
+                or not 0.0 <= rec <= 1.0:
+            errors.append(f"rows[{i}].post_compaction_recall = {rec!r} "
+                          "is not in [0, 1]")
+        elif rec < target:
+            # the live tier's contract point, gated in EVERY mode: churn
+            # + compaction must not corrupt the served state
+            errors.append(
+                f"rows[{i}] ({row['write_rate']}, "
+                f"{row['compact_interval']}) post-compaction recall "
+                f"{rec} below declared target {target}")
+        # generation bookkeeping: the cell really mutated under load and
+        # really folded its segments at least once
+        gen, comp = row["generation_final"], row["compactions"]
+        ok_ints = all(isinstance(v, int) and v >= 0
+                      for v in (gen, comp, row["mutations"],
+                                row["tombstones_final"]))
+        if not ok_ints:
+            errors.append(f"rows[{i}] generation/compaction/mutation "
+                          "counters are not non-negative integers")
+        else:
+            if comp < 1:
+                errors.append(f"rows[{i}] never compacted "
+                              f"(compactions = {comp})")
+            if gen < comp:
+                errors.append(f"rows[{i}] generation_final {gen} < "
+                              f"compactions {comp} — generations must "
+                              "be strictly monotone across swaps")
+            if row["mutations"] < 1:
+                errors.append(f"rows[{i}] served zero mutations — the "
+                              "cell never exercised churn")
+
+    for rate in requested["write_rates"]:
+        for interval in requested["compact_intervals"]:
+            if (rate, interval) not in seen:
+                errors.append(f"requested cell ({rate}, {interval}) "
+                              "never ran")
+    for cell in seen:
+        if cell[0] not in requested["write_rates"] \
+                or cell[1] not in requested["compact_intervals"]:
+            errors.append(f"row cell {cell} was never requested")
+    return errors
+
+
 def _pareto_objectives(row) -> tuple:
     """Maximization vector re-derived from a row — must match
     ``MeasuredPoint.objectives``: (qps, -p99_ms, recall)."""
@@ -516,7 +630,12 @@ def main(argv=None) -> int:
               f"front re-derived as non-dominated, counts add up, {gate}")
         return 0
     n = len(payload["rows"])
-    if payload.get("bench") == "ann_tradeoff":
+    if payload.get("bench") == "live_churn":
+        print(f"validate_bench: {path} OK — {n} rows cover the full "
+              "requested (write_rate x compact_interval) matrix, "
+              "post-compaction recall meets target "
+              f"{payload['recall_target']}, every cell compacted")
+    elif payload.get("bench") == "ann_tradeoff":
         print(f"validate_bench: {path} OK — {n} rows cover the full "
               "requested (space x method x budget) matrix, max-budget "
               f"recall meets target {payload['recall_target']}")

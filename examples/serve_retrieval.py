@@ -5,23 +5,29 @@ the one-pass fused Pallas kernel (``backend="pallas"``), plus the fused
 space a second time behind a 2-way sharded corpus on the reference
 backend, the dense space a second time through the Pallas MIPS kernel,
 a third time from a bf16-resident corpus (``corpus_dtype="bfloat16"``,
-half the HBM footprint, f32 score accumulation), and a fourth time
+half the HBM footprint, f32 score accumulation), a fourth time
 through the approximate ``graph_ann`` backend (the measured-recall
-tier) — hit by a multi-client load generator.
+tier), and a fifth time as a LIVE corpus (``live=``) that a writer
+thread mutates with inserts and deletes while the load generator is
+hitting it — hit by a multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
 projection, fused composite) -> train a LETOR fusion re-ranker AND the
-FusedSpace component weights -> stand up a RetrievalService with seven
+FusedSpace component weights -> stand up a RetrievalService with eight
 endpoints + result cache (each endpoint with a bounded admission queue)
 -> N client threads stream requests (hot-query repeats exercise the
-cache) -> report per-endpoint latency percentiles, batch fill, overload
-counters, execution backend + corpus dtype, cache hit-rate, and MRR@10
-on the sparse funnel — and verify that the sharded reference-backed
-fused endpoint answered bit-identically to the kernel-backed one, the
-pallas dense endpoint bit-identically to the reference one, the bf16
-dense endpoint recall-identically (the bounded-error precision tier) to
-the f32 one, and the graph-ANN endpoint to recall@10 >= the declared
-target (the measured-recall tier) vs the exact one.
+cache) while a writer churns the live endpoint -> report per-endpoint
+latency percentiles, batch fill, overload counters, execution backend +
+corpus dtype, cache hit-rate, and MRR@10 on the sparse funnel — and
+verify that the sharded reference-backed fused endpoint answered
+bit-identically to the kernel-backed one, the pallas dense endpoint
+bit-identically to the reference one, the bf16 dense endpoint
+recall-identically (the bounded-error precision tier) to the f32 one,
+the graph-ANN endpoint to recall@10 >= the declared target (the
+measured-recall tier) vs the exact one, and — after the churn drains
+and a final compaction folds the append segment and tombstones away —
+the live endpoint to recall@10 == 1.0 vs the exact frozen oracle
+(``segments.frozen_topk`` over the materialized final state).
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -46,9 +52,11 @@ from repro.core.scorers import (CompositeExtractor, bm25_doc_vectors,
 from repro.core.sparse import SparseVectors, densify
 from repro.core.spaces import (DenseSpace, FusedSpace, FusedVectors,
                                SparseSpace)
+from repro.core import segments
 from repro.data.pipeline import pad_tokens
 from repro.data.synthetic import make_corpus, qrels_to_labels
 from repro.serving import RetrievalService, ShardedPipeline
+from repro.serving.live import LiveCorpus
 
 N_CLIENTS = 4
 HOT_FRACTION = 0.3      # share of requests drawn from a small hot set
@@ -160,6 +168,20 @@ def build_service(rc, corpus):
                           batch_size=16, max_wait_s=0.01,
                           backend=ann_backend)
 
+    # ... and a FIFTH time as a LIVE corpus: the same dense rows behind
+    # the generation-versioned segment model (frozen main + exactly
+    # scanned append + tombstones; core/segments.py), mutated by a
+    # writer thread WHILE the load generator is hitting it.  live= is
+    # the whole registration difference: every cache key carries the
+    # served snapshot's generation, so a mutation can never surface a
+    # stale cached result, and main() verifies the endpoint against the
+    # exact frozen oracle after the churn drains and compaction folds
+    # the segments away.
+    live = LiveCorpus(DenseSpace("ip"), doc_dense, backend="reference",
+                      max_append=64, compact_interval_s=0.05).start()
+    svc.register_pipeline("dense_live", None, q_dense_all[0],
+                          batch_size=16, max_wait_s=0.01, live=live)
+
     # the mixed representation with the LEARNED mixing weights, scored and
     # selected on-device by the fused Pallas kernel (interpret mode
     # off-TPU): backend="pallas" is the whole difference, and the answers
@@ -198,10 +220,11 @@ def build_service(rc, corpus):
         "dense_pallas": lambda i: (q_dense_all[i], None),
         "dense_bf16": lambda i: (q_dense_all[i], None),
         "dense_ann": lambda i: (q_dense_all[i], None),
+        "dense_live": lambda i: (q_dense_all[i], None),
         "fused": fused_repr,
         "fused_sharded": fused_repr,
     }
-    return svc, fused_sharded, reprs, train_n, doc_dense
+    return svc, fused_sharded, reprs, train_n, doc_dense, live
 
 
 def run_load(svc, reprs, query_pool):
@@ -238,7 +261,31 @@ def main():
     rc = smoke_config()
     corpus = make_corpus(n_docs=rc.n_docs, n_queries=200,
                          vocab_lemmas=rc.vocab_lemmas, n_topics=10, seed=0)
-    svc, sharded_pipe, reprs, train_n, doc_dense = build_service(rc, corpus)
+    svc, sharded_pipe, reprs, train_n, doc_dense, live = \
+        build_service(rc, corpus)
+
+    # the live endpoint's writer: inserts fresh rows and deletes prior
+    # ones while the clients are querying — append rows, tombstones, and
+    # background compactions all happen under real load
+    stop_writer = threading.Event()
+    live_ids = list(range(doc_dense.shape[0]))
+    n_churned = [0]
+
+    def churn():
+        rng = np.random.default_rng(7)
+        while not stop_writer.is_set():
+            rows = rng.standard_normal(
+                (2, doc_dense.shape[1])).astype(np.float32)
+            live_ids.extend(int(i) for i in live.insert(rows))
+            victims = sorted(int(live_ids[j]) for j in rng.choice(
+                len(live_ids), size=2, replace=False))
+            live.delete(np.asarray(victims, dtype=np.int64))
+            gone = set(victims)
+            live_ids[:] = [i for i in live_ids if i not in gone]
+            n_churned[0] += 4
+            stop_writer.wait(0.01)
+
+    writer = threading.Thread(target=churn, name="live-writer", daemon=True)
 
     with svc:
         # warm-up: one request per endpoint triggers each jit compile so
@@ -250,7 +297,10 @@ def main():
         svc.reset_stats()
 
         query_pool = np.arange(train_n, 200)
+        writer.start()
         records, wall = run_load(svc, reprs, query_pool)
+        stop_writer.set()
+        writer.join()
         snap = svc.snapshot()
 
         # sharded-vs-unsharded and pallas-vs-reference spot checks: same
@@ -315,6 +365,36 @@ def main():
               f"{ann_recall:.3f} (declared target {ANN_RECALL_TARGET})")
         assert ann_recall >= ANN_RECALL_TARGET, \
             f"dense_ann recall@10 vs dense = {ann_recall}"
+
+        # live-tier spot check: with the churn drained, force a final
+        # compaction (append segment and tombstones fold into a fresh
+        # single-segment main) and serve the check queries through the
+        # endpoint — the answers must match the exact frozen oracle at
+        # the same logical state (segments.frozen_topk over the
+        # materialized final state).  The backend is exact, so this is
+        # recall@10 == 1.0 by bitwise identity, not approximation.
+        live.close()                   # stop the background compactor
+        live.compact()
+        final = live.snapshot()
+        assert final.n_append == 0 and final.n_dead == 0
+        frozen, ids = segments.materialize(final)
+        q_check = jnp.stack([reprs["dense_live"](i)[0] for i in check])
+        oracle_live = segments.frozen_topk(
+            DenseSpace("ip"), frozen, ids, q_check, 10, "reference")
+        futs = [svc.submit(*reprs["dense_live"](i), endpoint="dense_live")
+                for i in check]
+        got_ids = np.stack([f.result().indices for f in futs])
+        got_scores = np.stack([f.result().scores for f in futs])
+        live_recall = float(topk_recall(np.asarray(oracle_live.indices),
+                                        got_ids))
+        live_gen = svc.snapshot().endpoints["dense_live"].generation
+        print(f"dense_live measured recall@10 vs exact frozen oracle at "
+              f"generation {live_gen} ({n_churned[0]} churned rows): "
+              f"{live_recall:.3f}")
+        assert np.array_equal(got_scores, np.asarray(oracle_live.scores))
+        assert np.array_equal(got_ids, np.asarray(oracle_live.indices))
+        assert live_recall == 1.0, \
+            f"dense_live recall@10 vs frozen oracle = {live_recall}"
     sharded_pipe.close()
 
     # ---- quality on the sparse funnel (one result per unique query) --------
@@ -346,7 +426,9 @@ def main():
               f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
     print("fused_sharded bit-identical to fused, dense_pallas "
           "bit-identical to dense, dense_bf16 recall@10 == 1.0 vs dense, "
-          "dense_ann recall@10 >= target vs dense on spot-check queries")
+          "dense_ann recall@10 >= target vs dense, dense_live recall@10 "
+          "== 1.0 vs the exact frozen oracle after churn + compaction, "
+          "on spot-check queries")
     print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
     assert snap.cache_hits > 0

@@ -531,6 +531,29 @@ def clear_ann_index_cache():
         _ANN_INDEX_MISSES = 0
 
 
+def invalidate_ann_index_entries(corpus) -> int:
+    """Drop cached indexes built over exactly this corpus object (all
+    kinds / params / n_valid slices of it); every other entry survives.
+
+    This is the mutation path's invalidation: a live corpus's compaction
+    retires one main-segment pytree and must release the indexes pinned
+    to it without churning the shared LRU — a blanket clear (or letting
+    capacity eviction do the job) would evict *other* endpoints' warm
+    indexes.  Keying is by object identity, which for live corpora is
+    generation-keying: each compaction produces a fresh main pytree, and
+    non-compacting mutations never replace it.  In-flight builds are
+    unaffected — a build inserts its entry only after this call's lock
+    section, and in-flight *searches* on a retired snapshot still hold
+    the corpus and index through their own references.  Returns the
+    number of entries dropped."""
+    with _ANN_INDEX_LOCK:
+        doomed = [key for key, val in _ANN_INDEX_CACHE.items()
+                  if val[1] is corpus]
+        for key in doomed:
+            del _ANN_INDEX_CACHE[key]
+    return len(doomed)
+
+
 def _cached_ann_index(kind: str, space, corpus, n_valid: int, params: tuple,
                       build):
     """Memoise ``build()`` per (backend kind, space, corpus, n_valid,

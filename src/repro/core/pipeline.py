@@ -273,7 +273,16 @@ class RetrievalPipeline:
     final_qty: int = 10
 
     def run(self, query_repr, q_tokens: Optional[jax.Array] = None) -> TopK:
-        cands = self.generator.generate(query_repr, self.cand_qty)
+        generator = self.generator
+        # Live-corpus generators expose bind_snapshot(): acquire one
+        # immutable snapshot for the whole batch, so a concurrent
+        # mutation or compaction can never tear a result
+        # (repro.serving.live.LiveGenerator).  Frozen generators have no
+        # such seam and are used as-is.
+        bind = getattr(generator, "bind_snapshot", None)
+        if bind is not None:
+            generator = bind()
+        cands = generator.generate(query_repr, self.cand_qty)
         return apply_rerankers(
             cands, q_tokens, intermediate=self.intermediate, final=self.final,
             interm_qty=self.interm_qty, final_qty=self.final_qty)

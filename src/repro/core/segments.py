@@ -1,0 +1,344 @@
+"""Segment algebra for live (mutable) corpora.
+
+The Lucene/Anserini segment model adapted to row-major corpus pytrees:
+a corpus under mutation is a *generation-versioned* pair of segments —
+
+- a frozen **main segment** (any row-major corpus pytree, served through
+  any registered execution backend including the lazily-indexed ANN
+  backends), and
+- a bounded **append segment** holding rows inserted since the last
+  compaction, scanned *exactly* (reference / streaming / pallas),
+
+plus per-row **tombstone** flags on both segments (a delete or an upsert
+marks the superseded physical row dead without touching the arrays the
+backends score).  Every mutation batch produces a whole new
+``SegmentSnapshot`` with ``generation + 1`` — readers grab a snapshot
+reference and can never observe a half-applied batch.
+
+Everything in this module is pure: no locks, no threads, no clocks.
+The serving wrapper (``repro.serving.live.LiveCorpus``) owns mutation
+ordering, the background compactor, and the epoch swap; the algebra here
+is what the property tests in ``tests/test_live.py`` drive directly.
+
+Frozen equivalence (the invariant the ``live`` test tier pins): for
+exact backends, ``live_topk`` over a snapshot is bit-identical to
+searching a freshly built corpus materialized at the same logical state
+(``materialize`` + ``frozen_topk``).  Candidate *selection* follows the
+sharded-serving argument: per-segment candidate lists are fetched deep
+enough to absorb every tombstoned row (``k + n_dead(segment)``), dead
+candidates are masked to ``-inf``, and the main-then-append
+concatenation order reproduces ``lax.top_k``'s tie-break toward the
+lower materialized row.  Final *scores* are canonically rescored: both
+``live_topk`` and ``frozen_topk`` re-score their selected head rows
+through ``space.score_pairs`` at the identical ``(B * k,)`` pair shape,
+because XLA's scan gemm is NOT bitwise shape-stable — the same row can
+score a couple of ULPs apart in an ``(B, 16)``-column matmul vs an
+``(B, 49)``-column one (tail-handling reorders the K-loop), so two
+differently-segmented scans of one logical corpus cannot promise
+bitwise scores, but two identically-shaped pair rescores of the same
+selected rows can.  Rescoring selected candidates exactly is the
+standard IR move (and gives ANN-served mains exact final scores for
+free).  Degenerate tails (``k > n_live``) reproduce
+``_reference_tail``: ``-inf`` scores and synthetic ids ``n_live,
+n_live + 1, ...``.
+
+Both search entry points are host-side (they round-trip candidate ids
+through numpy to gather rows): never jit through them — the serving
+layer already rejects ``jit=True`` for live endpoints.
+
+Logical ids are assigned at insert time and are stable across epochs:
+compaction renumbers physical rows but never logical ids, and results
+are always expressed in logical ids (int32 in the ``TopK``, matching
+the backend contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .backends import (_empty_topk, _reference_tail, _rows, resolve_backend)
+from .brute_force import TopK, concat_topk, merge_topk
+
+__all__ = [
+    "SegmentSnapshot",
+    "compact",
+    "concat_rows",
+    "frozen_topk",
+    "live_topk",
+    "materialize",
+    "take_rows",
+]
+
+
+def _empty_ids() -> np.ndarray:
+    return np.zeros(0, dtype=np.int64)
+
+
+def _empty_mask() -> np.ndarray:
+    return np.zeros(0, dtype=bool)
+
+
+def take_rows(corpus, idx: np.ndarray):
+    """Gather rows ``idx`` from a row-major corpus pytree (None-safe)."""
+    if corpus is None:
+        return None
+    take = jnp.asarray(np.asarray(idx, dtype=np.int64))
+    return jax.tree.map(lambda leaf: jnp.asarray(leaf)[take], corpus)
+
+
+def concat_rows(a, b):
+    """Row-concatenate two corpus pytrees of the same structure."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(
+        lambda x, y: jnp.concatenate([jnp.asarray(x), jnp.asarray(y)], axis=0),
+        a, b)
+
+
+def _frozen_np(arr, dtype) -> np.ndarray:
+    out = np.array(arr, dtype=dtype)
+    out.flags.writeable = False
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSnapshot:
+    """One immutable logical state of a live corpus.
+
+    ``main`` / ``append`` are row-major corpus pytrees (or ``None`` when
+    empty); ``*_ids`` map physical rows to stable logical ids;
+    ``*_dead`` flag tombstoned physical rows (deleted, or superseded by
+    an upsert).  ``generation`` increases by exactly one per mutation
+    batch and per compaction — it is the value length-framed into
+    serving cache keys."""
+
+    generation: int = 0
+    main: Any = None
+    main_ids: np.ndarray = dataclasses.field(default_factory=_empty_ids)
+    main_dead: np.ndarray = dataclasses.field(default_factory=_empty_mask)
+    append: Any = None
+    append_ids: np.ndarray = dataclasses.field(default_factory=_empty_ids)
+    append_dead: np.ndarray = dataclasses.field(default_factory=_empty_mask)
+
+    def __post_init__(self):
+        object.__setattr__(self, "main_ids", _frozen_np(self.main_ids, np.int64))
+        object.__setattr__(self, "main_dead", _frozen_np(self.main_dead, bool))
+        object.__setattr__(self, "append_ids", _frozen_np(self.append_ids, np.int64))
+        object.__setattr__(self, "append_dead", _frozen_np(self.append_dead, bool))
+        for seg, ids, dead, label in (
+                (self.main, self.main_ids, self.main_dead, "main"),
+                (self.append, self.append_ids, self.append_dead, "append")):
+            n = _rows(seg) if seg is not None else 0
+            if n is None:
+                raise ValueError(f"{label} segment is not row-major")
+            if len(ids) != n or len(dead) != n:
+                raise ValueError(
+                    f"{label} segment has {n} rows but {len(ids)} ids / "
+                    f"{len(dead)} dead flags")
+
+    @property
+    def n_main(self) -> int:
+        return len(self.main_ids)
+
+    @property
+    def n_append(self) -> int:
+        return len(self.append_ids)
+
+    @property
+    def n_dead(self) -> int:
+        """Tombstone count: physical rows still resident but not live."""
+        return int(self.main_dead.sum()) + int(self.append_dead.sum())
+
+    @property
+    def n_live(self) -> int:
+        return self.n_main + self.n_append - self.n_dead
+
+    def live_ids(self) -> np.ndarray:
+        """Logical ids of live rows, in storage (materialization) order."""
+        return np.concatenate([self.main_ids[~self.main_dead],
+                               self.append_ids[~self.append_dead]])
+
+
+def materialize(snap: SegmentSnapshot):
+    """Collapse a snapshot to ``(corpus, ids)`` — live rows only, in
+    storage order (live main rows, then live append rows).
+
+    Storage order is the canonical order: it is what compaction freezes
+    into the next main segment, and it preserves the relative row order
+    the tie-break argument in the module docstring relies on.  Returns
+    ``(None, empty)`` for an empty logical state."""
+    main_keep = np.nonzero(~snap.main_dead)[0]
+    app_keep = np.nonzero(~snap.append_dead)[0]
+    parts, ids = [], []
+    if len(main_keep):
+        parts.append(take_rows(snap.main, main_keep))
+        ids.append(snap.main_ids[main_keep])
+    if len(app_keep):
+        parts.append(take_rows(snap.append, app_keep))
+        ids.append(snap.append_ids[app_keep])
+    if not parts:
+        return None, _empty_ids()
+    corpus = parts[0]
+    for p in parts[1:]:
+        corpus = concat_rows(corpus, p)
+    return corpus, np.concatenate(ids)
+
+
+def compact(snap: SegmentSnapshot) -> SegmentSnapshot:
+    """main ⊕ append ⊖ tombstones → a new single-segment snapshot.
+
+    The result has an empty append segment, zero tombstones, and
+    ``generation + 1``.  Compaction commutes with querying:
+    ``live_topk(compact(s))`` is bit-identical to ``live_topk(s)`` for
+    exact backends (property-tested in ``tests/test_live.py``)."""
+    corpus, ids = materialize(snap)
+    return SegmentSnapshot(
+        generation=snap.generation + 1,
+        main=corpus,
+        main_ids=ids,
+        main_dead=np.zeros(len(ids), dtype=bool),
+    )
+
+
+def _pair_scores(space, queries, docs_flat, b: int, k: int) -> jnp.ndarray:
+    """Canonical rescoring: score ``b * k`` (query, doc) pairs through
+    ``space.score_pairs`` and fold back to ``(b, k)``.  Every caller
+    with the same ``(b, k)`` and the same row bits gets bitwise-equal
+    scores — the property the segment scans themselves cannot offer."""
+    q_rep = jax.tree.map(lambda x: jnp.repeat(jnp.asarray(x), k, axis=0),
+                         queries)
+    return space.score_pairs(q_rep, docs_flat).reshape(b, k)
+
+
+def _locator(snap: SegmentSnapshot):
+    """Sorted logical-id -> physical-row lookup over live rows, built
+    lazily ONCE per (immutable) snapshot and memoised on it: queries
+    pay a vectorized ``searchsorted``, not a per-batch rebuild."""
+    cache = getattr(snap, "_locator_cache", None)
+    if cache is None:
+        ids = np.concatenate([snap.main_ids[~snap.main_dead],
+                              snap.append_ids[~snap.append_dead]])
+        pos = np.concatenate([np.nonzero(~snap.main_dead)[0],
+                              np.nonzero(~snap.append_dead)[0]])
+        in_app = np.concatenate(
+            [np.zeros(int((~snap.main_dead).sum()), dtype=bool),
+             np.ones(int((~snap.append_dead).sum()), dtype=bool)])
+        order = np.argsort(ids, kind="stable")
+        cache = (ids[order], pos[order], in_app[order])
+        object.__setattr__(snap, "_locator_cache", cache)
+    return cache
+
+
+def _select_rows(sel: np.ndarray, app_rows, main_rows):
+    """Per-row select between two gathered row pytrees (pure copy — no
+    arithmetic, so the selected bits match a single-corpus gather)."""
+    if main_rows is None:
+        return app_rows
+    if app_rows is None:
+        return main_rows
+    flags = jnp.asarray(sel)
+    return jax.tree.map(
+        lambda a, m: jnp.where(
+            flags.reshape((-1,) + (1,) * (a.ndim - 1)), a, m),
+        app_rows, main_rows)
+
+
+def _rescore_live(space, snap: SegmentSnapshot, queries, head: TopK) -> TopK:
+    """Replace a merged head's scan scores with the canonical pair
+    rescoring of its (live) rows, keeping selection order."""
+    b, hk = head.indices.shape
+    want = np.asarray(head.indices).astype(np.int64).ravel()
+    ids, pos, in_app = _locator(snap)
+    j = np.searchsorted(ids, want)
+    app = in_app[j]
+    p = pos[j]
+    main_rows = (take_rows(snap.main, np.where(app, 0, p))
+                 if snap.n_main else None)
+    app_rows = (take_rows(snap.append, np.where(app, p, 0))
+                if snap.n_append else None)
+    docs = _select_rows(app, app_rows, main_rows)
+    return TopK(_pair_scores(space, queries, docs, b, hk), head.indices)
+
+
+def _segment_topk(space, seg, seg_ids, seg_dead, queries, k, backend) -> TopK:
+    """Candidate list from one segment: fetch ``k + n_dead`` physical
+    rows, mask tombstones to ``-inf``, map to logical ids.
+
+    Over-fetching by the segment's tombstone count guarantees at least
+    ``min(k, n_live(segment))`` live candidates survive the mask, so the
+    cross-segment merge can never starve.  The surviving candidates keep
+    the backend's (score desc, lower-row-first) order, which filtering
+    preserves — the key step of the frozen-equivalence argument."""
+    n = len(seg_ids)
+    n_dead = int(seg_dead.sum())
+    k_fetch = min(n, k + n_dead)
+    bk = resolve_backend(backend, space, seg)
+    res = bk.topk(space, queries, seg, k_fetch, n_valid=n)
+    dead = jnp.asarray(seg_dead)[res.indices]
+    scores = jnp.where(dead, -jnp.inf, res.scores)
+    ids = jnp.asarray(seg_ids.astype(np.int32))[res.indices]
+    return TopK(scores, ids)
+
+
+def live_topk(space, snap: SegmentSnapshot, queries, k: int, *,
+              main_backend="reference",
+              append_backend="reference") -> TopK:
+    """Top-k over a snapshot's logical state, in logical ids.
+
+    The main segment is served through ``main_backend`` (any registered
+    backend — exact or ANN); the append segment is always scanned
+    exactly through ``append_backend`` (reference / streaming /
+    pallas).  Note the main fetch depth is ``k + main tombstones``: ANN
+    budgets (``ef``, ``rerank_qty``) must cover that, which is why the
+    serving wrapper bounds tombstones via its compaction thresholds."""
+    b = int(jax.tree.leaves(queries)[0].shape[0])
+    if k <= 0:
+        return _empty_topk(b)
+    parts = []
+    if snap.n_main:
+        parts.append(_segment_topk(space, snap.main, snap.main_ids,
+                                   snap.main_dead, queries, k, main_backend))
+    if snap.n_append:
+        parts.append(_segment_topk(space, snap.append, snap.append_ids,
+                                   snap.append_dead, queries, k,
+                                   append_backend))
+    n_live = snap.n_live
+    hk = min(k, n_live)
+    if not parts or hk == 0:
+        return _reference_tail(_empty_topk(b), b, k, 0)
+    merged = _rescore_live(space, snap, queries,
+                           merge_topk(concat_topk(parts), hk))
+    if hk == k:
+        return merged
+    return _reference_tail(merged, b, k, n_live)
+
+
+def frozen_topk(space, corpus, ids: np.ndarray, queries, k: int,
+                backend="reference") -> TopK:
+    """Oracle for frozen-equivalence: search a freshly materialized
+    corpus (``materialize``'s output) and express the result in logical
+    ids, with the same degenerate-tail semantics as ``live_topk``."""
+    b = int(jax.tree.leaves(queries)[0].shape[0])
+    n = len(ids)
+    if k <= 0:
+        return _empty_topk(b)
+    if n == 0:
+        return _reference_tail(_empty_topk(b), b, k, 0)
+    bk = resolve_backend(backend, space, corpus)
+    hk = min(k, n)
+    res = bk.topk(space, queries, corpus, hk, n_valid=n)
+    docs = take_rows(corpus, np.asarray(res.indices).astype(np.int64).ravel())
+    head = TopK(_pair_scores(space, queries, docs, b, hk),
+                jnp.asarray(ids.astype(np.int32))[res.indices])
+    if hk == k:
+        return head
+    # k > n: the reference tail over the materialized corpus — -inf
+    # scores, synthetic ids n, n+1, ... — matches live_topk's tail.
+    return _reference_tail(head, b, k, n)

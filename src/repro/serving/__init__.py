@@ -10,6 +10,7 @@ from repro.serving.autotune import (AutotuneResult, MeasuredPoint,
 from repro.serving.batcher import (OVERLOAD_POLICIES, ContinuousBatcher,
                                    Request, ServiceOverloaded)
 from repro.serving.cache import QueryCache, quantized_key
+from repro.serving.live import LiveCorpus, LiveGenerator, SnapshotGenerator
 from repro.serving.router import Router
 from repro.serving.service import RetrievalService
 from repro.serving.sharded import CorpusShard, ShardedPipeline, shard_corpus
@@ -23,6 +24,9 @@ __all__ = [
     "OVERLOAD_POLICIES",
     "QueryCache",
     "quantized_key",
+    "LiveCorpus",
+    "LiveGenerator",
+    "SnapshotGenerator",
     "Router",
     "RetrievalService",
     "CorpusShard",

@@ -70,6 +70,11 @@ class Request:
     future: Future
     t_admit: float
     cache_key: Optional[bytes] = None
+    # live-corpus generation the cache_key was stamped with at submit
+    # time (None on frozen endpoints): if the batch ends up served from
+    # a newer snapshot, the service re-keys the stored result to the
+    # generation that actually produced it
+    generation: Optional[int] = None
 
 
 class _AdmissionQueue:

@@ -44,9 +44,10 @@ def _framed(h, data: bytes):
 def quantized_key(endpoint: str, query: Any, decimals: int = 6,
                   backend: Optional[str] = None,
                   corpus_dtype: Optional[str] = None,
-                  profile: Optional[str] = None) -> bytes:
+                  profile: Optional[str] = None,
+                  generation: Optional[int] = None) -> bytes:
     """Stable digest of (endpoint, backend identity, corpus residency
-    dtype, tuned-profile tag, quantized query).
+    dtype, tuned-profile tag, corpus generation, quantized query).
 
     Float leaves are rounded to ``decimals``; integer leaves (token ids,
     sparse indices) are hashed exactly.  Leaf shapes and dtypes are folded
@@ -55,12 +56,18 @@ def quantized_key(endpoint: str, query: Any, decimals: int = 6,
     scores are a different precision tier than an f32 endpoint's over the
     same corpus, and the two must never answer from each other's
     entries.  ``profile`` (a ``TunedProfile.tag``) keys autotuned
-    endpoints' entries by provenance the same way."""
+    endpoints' entries by provenance the same way.  ``generation`` is the
+    live-corpus snapshot generation (``repro.serving.live``): results are
+    stored under the generation that actually produced them and looked up
+    under the current one, so a stale hit after a mutation or compaction
+    is structurally impossible — the key differs.  Frozen endpoints pass
+    None, which frames as the empty field (distinct from generation 0)."""
     h = hashlib.blake2b(digest_size=16)
     _framed(h, endpoint.encode())
     _framed(h, (backend or "").encode())
     _framed(h, (corpus_dtype or "").encode())
     _framed(h, (profile or "").encode())
+    _framed(h, b"" if generation is None else str(int(generation)).encode())
     for leaf in jax.tree.leaves(query):
         a = np.asarray(leaf)
         if np.issubdtype(a.dtype, np.floating):
@@ -88,10 +95,11 @@ class QueryCache:
     def key(self, endpoint: str, query: Any,
             backend: Optional[str] = None,
             corpus_dtype: Optional[str] = None,
-            profile: Optional[str] = None) -> bytes:
+            profile: Optional[str] = None,
+            generation: Optional[int] = None) -> bytes:
         return quantized_key(endpoint, query, self.decimals,
                              backend=backend, corpus_dtype=corpus_dtype,
-                             profile=profile)
+                             profile=profile, generation=generation)
 
     def get(self, key: bytes) -> Optional[Any]:
         with self._lock:

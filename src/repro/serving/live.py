@@ -1,0 +1,429 @@
+"""Live corpora: insert/delete/upsert behind a serving endpoint.
+
+``LiveCorpus`` wraps the pure segment algebra in ``core.segments`` with
+everything serving needs: mutation ordering under a writer lock, an
+atomically epoch-swapped immutable snapshot (readers pin a snapshot
+reference once per batch and finish on it — a Python attribute read, so
+the swap is atomic and a query can never observe a half-applied
+mutation batch), a background compactor thread that materializes
+main ⊕ append ⊖ tombstones and rebuilds/warms the main ANN index
+*off-thread* before swapping it in, and the freshness metrics
+(`segment counts, tombstone count, compaction latency, snapshot age``)
+that surface in ``EndpointSnapshot``.
+
+Concurrency model
+-----------------
+- **Writers** (``insert`` / ``delete`` / ``upsert``) serialize on one
+  lock; each batch builds a complete new ``SegmentSnapshot`` with
+  ``generation + 1`` and swaps it in one assignment.
+- **Readers** call :meth:`snapshot` (or go through ``LiveGenerator``,
+  which pins a snapshot per batch via ``bind_snapshot``) and never
+  block writers.
+- **The compactor** races both: it captures a snapshot + per-id version
+  vector, does the expensive materialization and ANN-index warm outside
+  the lock, then re-enters the lock to reconcile mutations that landed
+  meanwhile (rows upserted/deleted since are tombstoned in the new
+  main; rows appended since become the new append tail) and swaps.
+  Generations stay strictly monotone throughout.
+
+Stale cache hits are structurally impossible because the serving layer
+length-frames the snapshot generation into every cache key
+(``QueryCache.key(..., generation=...)``) — see ``RetrievalService``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segments
+from repro.core.backends import (PallasBackend, ReferenceBackend,
+                                 StreamingBackend, backend_identity,
+                                 invalidate_ann_index_entries,
+                                 resolve_backend)
+from repro.core.brute_force import TopK
+from repro.core.segments import SegmentSnapshot
+from repro.core.spaces import canonical_dtype, cast_corpus, corpus_dtype
+
+__all__ = ["LiveCorpus", "LiveGenerator", "SnapshotGenerator"]
+
+_EXACT_BACKENDS = (ReferenceBackend, StreamingBackend, PallasBackend)
+
+
+class LiveCorpus:
+    """A mutable corpus served through generation-versioned segments.
+
+    ``backend`` serves the frozen main segment (any registered backend,
+    including ``graph_ann``/``napp`` — their lazily built indexes are
+    keyed by the main corpus object, which only changes at compaction,
+    so the index stays warm across non-compacting mutations).
+    ``append_backend`` scans the append segment and must be exact
+    (reference / streaming / pallas).
+
+    ``max_append`` / ``max_dead`` bound the append segment and the
+    tombstone count: crossing either threshold triggers compaction —
+    handed to the background compactor thread when :meth:`start` has
+    been called, run inline on the mutating thread otherwise.  Bounded
+    tombstones also bound the extra fetch depth ``live_topk`` needs
+    (``k + tombstones(segment)``), which is what keeps ANN budgets
+    (``ef``) sufficient under churn.
+    """
+
+    def __init__(self, space, corpus=None, *, ids=None,
+                 backend: Any = "reference",
+                 append_backend: Any = "reference",
+                 corpus_dtype: Optional[str] = None,
+                 max_append: int = 1024,
+                 max_dead: Optional[int] = None,
+                 compact_interval_s: Optional[float] = None,
+                 time_fn: Callable[[], float] = time.monotonic):
+        self.space = space
+        self._time = time_fn
+        self.max_append = int(max_append)
+        self.max_dead = None if max_dead is None else int(max_dead)
+        self.compact_interval_s = compact_interval_s
+
+        self._dtype = (canonical_dtype(corpus_dtype)
+                       if corpus_dtype is not None else None)
+        if corpus is not None and self._dtype is not None:
+            corpus = cast_corpus(corpus, self._dtype)
+
+        self.main_backend = (resolve_backend(backend, space, corpus)
+                             if corpus is not None
+                             else resolve_backend(backend))
+        self.append_backend = resolve_backend(append_backend)
+        if not isinstance(self.append_backend, _EXACT_BACKENDS):
+            raise ValueError(
+                "append_backend must be exact (reference/streaming/pallas): "
+                "the append segment is scanned, not indexed — got "
+                f"{backend_identity(self.append_backend)!r}")
+
+        n = 0
+        if corpus is not None:
+            corpus = jax.tree.map(jnp.asarray, corpus)
+            n = segments._rows(corpus)
+            if n is None:
+                raise ValueError("corpus is not a row-major pytree")
+        if ids is None:
+            ids = np.arange(n, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, dtype=np.int64)
+            if len(ids) != n or len(np.unique(ids)) != n:
+                raise ValueError("ids must be unique and match the corpus "
+                                 "row count")
+        self._lock = threading.RLock()
+        self._compact_lock = threading.Lock()
+        self._snapshot = SegmentSnapshot(
+            generation=0, main=corpus, main_ids=ids,
+            main_dead=np.zeros(n, dtype=bool))
+        self._loc: Dict[int, Tuple[str, int]] = {
+            int(i): ("main", row) for row, i in enumerate(ids)}
+        self._versions: Dict[int, int] = {int(i): 0 for i in ids}
+        self._next_id = int(ids.max()) + 1 if n else 0
+        self._swapped_at = self._time()
+        self._compactions = 0
+        self._compaction_s: collections.deque = collections.deque(maxlen=128)
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- reading ------------------------------------------------------------
+    def snapshot(self) -> SegmentSnapshot:
+        """The current immutable state.  Hold the reference for the whole
+        batch: everything computed from one snapshot is mutually
+        consistent and survives any number of concurrent swaps."""
+        return self._snapshot
+
+    @property
+    def generation(self) -> int:
+        return self._snapshot.generation
+
+    @property
+    def corpus_dtype(self) -> Optional[str]:
+        if self._dtype is not None:
+            return self._dtype
+        snap = self._snapshot
+        return corpus_dtype(snap.main if snap.main is not None
+                            else snap.append)
+
+    def topk(self, queries, k: int) -> TopK:
+        """Search the current snapshot (logical ids; see
+        ``segments.live_topk``)."""
+        return segments.live_topk(
+            self.space, self.snapshot(), queries, k,
+            main_backend=self.main_backend,
+            append_backend=self.append_backend)
+
+    def live_stats(self) -> Dict[str, Any]:
+        """Freshness metrics for ``EndpointSnapshot``."""
+        snap = self._snapshot
+        return {
+            "generation": snap.generation,
+            "segment_rows": {"main": snap.n_main, "append": snap.n_append},
+            "tombstones": snap.n_dead,
+            "snapshot_age_s": self._time() - self._swapped_at,
+            "compactions": self._compactions,
+            "compaction_s": list(self._compaction_s),
+        }
+
+    # -- mutation -----------------------------------------------------------
+    def _swap(self, snap: SegmentSnapshot):
+        # caller holds self._lock
+        self._snapshot = snap
+        self._swapped_at = self._time()
+
+    def _coerce_rows(self, rows):
+        rows = jax.tree.map(jnp.asarray, rows)
+        m = segments._rows(rows)
+        if not m:
+            raise ValueError("rows must be a row-major pytree with at "
+                             "least one row")
+        if self._dtype is None:
+            self._dtype = corpus_dtype(rows)
+        elif corpus_dtype(rows) != self._dtype:
+            rows = cast_corpus(rows, self._dtype)
+        return rows, m
+
+    def insert(self, rows) -> np.ndarray:
+        """Append ``rows`` (a row-major pytree) as new documents; returns
+        their newly assigned logical ids."""
+        rows, m = self._coerce_rows(rows)
+        with self._lock:
+            snap = self._snapshot
+            new_ids = np.arange(self._next_id, self._next_id + m,
+                                dtype=np.int64)
+            self._next_id += m
+            base = snap.n_append
+            self._swap(SegmentSnapshot(
+                generation=snap.generation + 1,
+                main=snap.main, main_ids=snap.main_ids,
+                main_dead=snap.main_dead,
+                append=segments.concat_rows(snap.append, rows),
+                append_ids=np.concatenate([snap.append_ids, new_ids]),
+                append_dead=np.concatenate(
+                    [snap.append_dead, np.zeros(m, dtype=bool)])))
+            for j, i in enumerate(new_ids):
+                ii = int(i)
+                self._loc[ii] = ("append", base + j)
+                self._versions[ii] = self._versions.get(ii, -1) + 1
+        self._maybe_compact()
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone the given logical ids.  Raises ``KeyError`` on an id
+        that is not live.  Returns the number of rows tombstoned."""
+        ids = [int(i) for i in np.atleast_1d(np.asarray(ids, dtype=np.int64))]
+        with self._lock:
+            snap = self._snapshot
+            for i in ids:
+                if i not in self._loc:
+                    raise KeyError(f"id {i} is not live")
+            main_dead = snap.main_dead.copy()
+            append_dead = snap.append_dead.copy()
+            for i in ids:
+                seg, pos = self._loc.pop(i)
+                (main_dead if seg == "main" else append_dead)[pos] = True
+                self._versions[i] += 1
+            self._swap(dataclasses.replace(
+                snap, generation=snap.generation + 1,
+                main_dead=main_dead, append_dead=append_dead))
+        self._maybe_compact()
+        return len(ids)
+
+    def upsert(self, ids, rows) -> np.ndarray:
+        """Insert-or-replace: each ``(id, row)`` pair replaces the live
+        row for that logical id (tombstoning the superseded physical
+        row) or inserts a fresh document under that id.  Logical ids are
+        stable across upserts and epochs."""
+        rows, m = self._coerce_rows(rows)
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if len(ids) != m:
+            raise ValueError(f"{len(ids)} ids for {m} rows")
+        with self._lock:
+            snap = self._snapshot
+            main_dead = snap.main_dead.copy()
+            append_dead = snap.append_dead.copy()
+            base = snap.n_append
+            new_dead = np.zeros(m, dtype=bool)
+            for j, i in enumerate(ids):
+                ii = int(i)
+                old = self._loc.get(ii)
+                if old is not None:
+                    seg, pos = old
+                    if seg == "main":
+                        main_dead[pos] = True
+                    elif pos < base:
+                        append_dead[pos] = True
+                    else:           # superseded earlier in this same batch
+                        new_dead[pos - base] = True
+                self._loc[ii] = ("append", base + j)
+                self._versions[ii] = self._versions.get(ii, -1) + 1
+                self._next_id = max(self._next_id, ii + 1)
+            self._swap(SegmentSnapshot(
+                generation=snap.generation + 1,
+                main=snap.main, main_ids=snap.main_ids,
+                main_dead=main_dead,
+                append=segments.concat_rows(snap.append, rows),
+                append_ids=np.concatenate([snap.append_ids, ids]),
+                append_dead=np.concatenate([append_dead, new_dead])))
+        self._maybe_compact()
+        return ids
+
+    # -- compaction ---------------------------------------------------------
+    def _maybe_compact(self):
+        snap = self._snapshot
+        over = (snap.n_append >= self.max_append
+                or (self.max_dead is not None
+                    and snap.n_dead >= self.max_dead))
+        if not over:
+            return
+        if self._thread is not None and self._thread.is_alive():
+            self._wake.set()
+        else:
+            self.compact()
+
+    def compact(self) -> bool:
+        """Materialize main ⊕ append ⊖ tombstones into a fresh main
+        segment and epoch-swap it in.  The expensive part (row
+        gather/concat + warming the main ANN index) runs outside the
+        writer lock; mutations that land meanwhile are reconciled at
+        swap time (their superseded rows tombstoned in the new main,
+        their new rows carried over as the append tail).  Returns False
+        when there was nothing to compact."""
+        with self._compact_lock:
+            t0 = self._time()
+            with self._lock:
+                snap0 = self._snapshot
+                if snap0.n_append == 0 and snap0.n_dead == 0:
+                    return False
+                vers0 = {int(i): self._versions[int(i)]
+                         for i in snap0.live_ids()}
+            corpus, ids = segments.materialize(snap0)
+            if corpus is not None and hasattr(self.main_backend, "_index"):
+                # warm the lazily built ANN index off-thread so the epoch
+                # swap lands with the new main immediately servable
+                self.main_backend._index(self.space, corpus, len(ids))
+            with self._lock:
+                cur = self._snapshot
+                main_dead = np.fromiter(
+                    (int(i) not in self._loc
+                     or self._versions[int(i)] != vers0[int(i)]
+                     for i in ids), dtype=bool, count=len(ids))
+                tail_lo = snap0.n_append
+                tail_ids = cur.append_ids[tail_lo:]
+                tail_dead = cur.append_dead[tail_lo:]
+                tail = (None if not len(tail_ids) else jax.tree.map(
+                    lambda x: x[tail_lo:], cur.append))
+                self._swap(SegmentSnapshot(
+                    generation=cur.generation + 1,
+                    main=corpus, main_ids=ids, main_dead=main_dead,
+                    append=tail, append_ids=tail_ids,
+                    append_dead=tail_dead))
+                for key, (seg, pos) in list(self._loc.items()):
+                    if seg == "append" and pos >= tail_lo:
+                        self._loc[key] = ("append", pos - tail_lo)
+                for row, i in enumerate(ids):
+                    if not main_dead[row]:
+                        self._loc[int(i)] = ("main", row)
+                retired = snap0.main
+            self._compactions += 1
+            self._compaction_s.append(self._time() - t0)
+            # targeted invalidation: only the retired main's index
+            # entries — other corpora's (other endpoints') entries and
+            # in-flight builds are untouched.  In-flight batches pinning
+            # the old snapshot still hold the corpus+index alive.
+            if retired is not None and retired is not corpus:
+                invalidate_ann_index_entries(retired)
+            return True
+
+    # -- background compactor / lifecycle -----------------------------------
+    def start(self) -> "LiveCorpus":
+        """Start the background compactor thread (idempotent).  It wakes
+        on threshold triggers and every ``compact_interval_s`` (if
+        set)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._compactor_loop, name="live-compactor",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def _compactor_loop(self):
+        while not self._stop.is_set():
+            self._wake.wait(timeout=self.compact_interval_s)
+            self._wake.clear()
+            if self._stop.is_set():
+                return
+            snap = self._snapshot
+            if snap.n_append or snap.n_dead:
+                self.compact()
+
+    def close(self):
+        """Stop the compactor thread and wait for any in-flight
+        compaction to finish (the corpus stays queryable)."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "LiveCorpus":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotGenerator:
+    """A ``CandidateGenerator`` frozen at one snapshot: everything the
+    batch computes comes from a single consistent logical state."""
+
+    live: LiveCorpus
+    snap: SegmentSnapshot
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return segments.live_topk(
+            self.live.space, self.snap, query_repr, k,
+            main_backend=self.live.main_backend,
+            append_backend=self.live.append_backend)
+
+
+class LiveGenerator:
+    """Candidate generator over a :class:`LiveCorpus`.
+
+    ``RetrievalPipeline.run`` / ``ShardedPipeline.generate`` call
+    :meth:`bind_snapshot` once per batch, so an in-flight batch finishes
+    on the snapshot it started with regardless of concurrent mutations
+    or compactions.  ``last_served_generation`` records the pinned
+    generation; the batcher worker reads it right after the batch to
+    stamp cache keys (single-threaded per endpoint, so the read is
+    race-free)."""
+
+    def __init__(self, live: LiveCorpus):
+        self.live = live
+        self.last_served_generation: Optional[int] = None
+
+    @property
+    def backend(self):
+        return self.live.main_backend
+
+    @property
+    def corpus_dtype(self) -> Optional[str]:
+        return self.live.corpus_dtype
+
+    def bind_snapshot(self) -> SnapshotGenerator:
+        snap = self.live.snapshot()
+        self.last_served_generation = snap.generation
+        return SnapshotGenerator(self.live, snap)
+
+    def generate(self, query_repr, k: int) -> TopK:
+        return self.bind_snapshot().generate(query_repr, k)

@@ -119,6 +119,11 @@ class RetrievalService:
         # ShardedPipeline owns a fresh host-parallel pool the caller
         # never sees
         self._owned_pipelines: List[Any] = []
+        # endpoint name -> (LiveCorpus, served-generation reader) for
+        # endpoints registered with register_pipeline(live=...): submit
+        # stamps the current generation into cache keys, _on_result
+        # re-keys to the generation the batch actually served
+        self._live_endpoints: dict = {}
         self._closed = False
 
     # -- endpoint registration ----------------------------------------------
@@ -176,7 +181,7 @@ class RetrievalService:
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
         backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
-        profile: Optional[Any] = None,
+        profile: Optional[Any] = None, live: Optional[Any] = None,
     ) -> "RetrievalService":
         """Serve a :class:`RetrievalPipeline` (or
         :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
@@ -206,7 +211,55 @@ class RetrievalService:
         point nobody measured).  The pipeline's shard count must match
         the profile's genome for the same reason.  The profile tag lands
         in snapshots and cache keys; ``profile.config.cache_size`` is a
-        service-level knob (the :class:`RetrievalService` constructor)."""
+        service-level knob (the :class:`RetrievalService` constructor).
+
+        ``live`` (a :class:`~repro.serving.live.LiveCorpus`) serves a
+        *mutable* corpus: pass ``pipeline=None`` to serve the live
+        corpus's candidate stage directly, or a
+        :class:`~repro.core.pipeline.RetrievalPipeline` whose generator
+        is a ``LiveGenerator`` over the same corpus for custom funnel
+        depths.  Mutually exclusive with ``backend`` / ``corpus_dtype``
+        / ``profile`` / ``jit`` — the live corpus declares its own
+        backends and dtype, and its run path is snapshot-pinning host
+        code.  Every batch is pinned to one snapshot; the snapshot
+        generation is length-framed into this endpoint's cache keys
+        (stored under the generation that produced the result), so a
+        mutation or compaction can never surface a stale hit.  Endpoint
+        snapshots gain segment row counts, tombstones, compaction
+        latency, and snapshot age."""
+        if live is not None:
+            from repro.core.pipeline import RetrievalPipeline
+            from repro.serving.live import LiveGenerator
+
+            if backend is not None or corpus_dtype is not None \
+                    or profile is not None:
+                raise ValueError(
+                    "live= is mutually exclusive with backend=, "
+                    "corpus_dtype=, and profile=: a LiveCorpus declares "
+                    "its own backends and residency dtype")
+            if jit:
+                raise ValueError(
+                    "live endpoints cannot be jitted: the run path pins "
+                    "snapshots and reads host state per batch")
+            if pipeline is None:
+                pipeline = RetrievalPipeline(generator=LiveGenerator(live))
+            generator = getattr(pipeline, "generator", None)
+            if not isinstance(generator, LiveGenerator) \
+                    or generator.live is not live:
+                raise ValueError(
+                    "live= requires pipeline=None or a RetrievalPipeline "
+                    "whose generator is a LiveGenerator over the same "
+                    "LiveCorpus")
+            self.register_runner(
+                name, pipeline.run, pad_query_repr, pad_q_tokens,
+                batch_size=batch_size, max_wait_s=max_wait_s,
+                max_queue=max_queue, overload=overload,
+                backend=backend_identity(live.main_backend),
+                corpus_dtype=live.corpus_dtype)
+            self.stats.register_endpoint(name, live_fn=live.live_stats)
+            self._live_endpoints[name] = (
+                live, lambda: generator.last_served_generation)
+            return self
         if profile is not None:
             if backend is not None or corpus_dtype is not None:
                 raise ValueError(
@@ -285,11 +338,15 @@ class RetrievalService:
         t_admit = self._time_fn()
         self.stats.record_request(batcher.name)
         key = None
+        live_entry = self._live_endpoints.get(batcher.name)
+        generation = (live_entry[0].generation
+                      if live_entry is not None else None)
         if self.cache is not None:
             key = self.cache.key(batcher.name, (query_repr, q_tokens),
                                  backend=batcher.backend,
                                  corpus_dtype=batcher.corpus_dtype,
-                                 profile=batcher.profile)
+                                 profile=batcher.profile,
+                                 generation=generation)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record_cache(True)
@@ -301,7 +358,8 @@ class RetrievalService:
         fut = Future()
         self.router.dispatch(Request(
             query_repr=query_repr, q_tokens=q_tokens, endpoint=batcher.name,
-            future=fut, t_admit=t_admit, cache_key=key))
+            future=fut, t_admit=t_admit, cache_key=key,
+            generation=generation))
         # counted only after dispatch succeeds: a rejected submit is not a
         # cache miss, so hit-rate keeps meaning "share of admitted requests
         # answered from cache" even under overload
@@ -325,7 +383,28 @@ class RetrievalService:
 
     def _on_result(self, request: Request, result: Any):
         if self.cache is not None and request.cache_key is not None:
-            self.cache.put(request.cache_key, result)
+            key = request.cache_key
+            entry = self._live_endpoints.get(request.endpoint)
+            if entry is not None:
+                # Store under the generation that actually produced the
+                # result: the batch may have closed after a mutation
+                # landed between submit and execution.  The pinned
+                # generation is read from the generator on this same
+                # batcher worker thread, right after the batch ran, so
+                # it cannot race a later batch.  Lookups always key the
+                # *current* generation, so a hit is by construction a
+                # result computed at the generation it claims.
+                live, served_generation = entry
+                served = served_generation()
+                if served is not None and served != request.generation:
+                    batcher = self.router.resolve(request.endpoint)
+                    key = self.cache.key(
+                        request.endpoint,
+                        (request.query_repr, request.q_tokens),
+                        backend=batcher.backend,
+                        corpus_dtype=batcher.corpus_dtype,
+                        profile=batcher.profile, generation=served)
+            self.cache.put(key, result)
 
     # -- lifecycle / observability -------------------------------------------
     def snapshot(self) -> ServiceSnapshot:

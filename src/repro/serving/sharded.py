@@ -242,6 +242,13 @@ class ShardedPipeline:
     def generate(self, query_repr, k: Optional[int] = None) -> TopK:
         """Global top-k candidates from the sharded generator stage."""
         k = self.cand_qty if k is None else k
+        # Live-corpus shard generators expose bind_snapshot(): pin every
+        # shard's snapshot up front, before the fan-out, so one batch
+        # sees a mutually consistent set of per-shard states even while
+        # writers and compactors race the query threads
+        # (repro.serving.live.LiveGenerator).
+        generators = [g.bind_snapshot() if hasattr(g, "bind_snapshot") else g
+                      for g in self.generators]
 
         def one(gen, shard: CorpusShard) -> TopK:
             local = gen.generate(query_repr, min(k, shard.n_rows))
@@ -253,9 +260,9 @@ class ShardedPipeline:
         tracing = any(isinstance(leaf, jax.core.Tracer)
                       for leaf in jax.tree.leaves(query_repr))
         if self.executor is not None and not tracing:
-            parts = list(self.executor.map(one, self.generators, self.shards))
+            parts = list(self.executor.map(one, generators, self.shards))
         else:
-            parts = [one(g, s) for g, s in zip(self.generators, self.shards)]
+            parts = [one(g, s) for g, s in zip(generators, self.shards)]
         cat = concat_topk(parts)
         return merge_topk(cat, min(k, cat.scores.shape[1]))
 

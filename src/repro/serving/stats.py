@@ -98,6 +98,18 @@ class EndpointSnapshot:
     # measurement from one paying cold builds/tuning sweeps.
     tile_cache: Optional[Dict[str, int]] = None
     ann_index_cache: Optional[Dict[str, int]] = None
+    # live-corpus freshness (None on frozen endpoints): the snapshot
+    # generation currently served, per-segment row counts
+    # ({"main": ..., "append": ...}), resident tombstoned rows, lifetime
+    # compaction count + latency percentiles, and how long ago the
+    # served snapshot was swapped in — the numbers that tell "results
+    # are fresh" from "the compactor is falling behind the write rate"
+    generation: Optional[int] = None
+    segment_rows: Optional[Dict[str, int]] = None
+    tombstones: Optional[int] = None
+    compactions: Optional[int] = None
+    compaction: Optional[LatencySummary] = None
+    snapshot_age_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +158,7 @@ class ServingStats:
         self._backends: Dict[str, str] = {}
         self._corpus_dtypes: Dict[str, str] = {}
         self._profiles: Dict[str, str] = {}
+        self._live_fns: Dict[str, Callable[[], Dict]] = {}
         self.cache_hits = 0
         self.cache_misses = 0
 
@@ -155,7 +168,10 @@ class ServingStats:
                           depth_limit: Optional[int] = None,
                           backend: Optional[str] = None,
                           corpus_dtype: Optional[str] = None,
-                          profile: Optional[str] = None):
+                          profile: Optional[str] = None,
+                          live_fn: Optional[Callable[[], Dict]] = None):
+        """``live_fn`` (``LiveCorpus.live_stats``) makes this endpoint
+        report live-corpus freshness in its snapshots."""
         with self._lock:
             self._endpoints.setdefault(name, _EndpointStats(name))
             if depth_fn is not None:
@@ -168,6 +184,8 @@ class ServingStats:
                 self._corpus_dtypes[name] = corpus_dtype
             if profile is not None:
                 self._profiles[name] = profile
+            if live_fn is not None:
+                self._live_fns[name] = live_fn
 
     def _ep(self, name: str) -> _EndpointStats:
         return self._endpoints.setdefault(name, _EndpointStats(name))
@@ -224,11 +242,15 @@ class ServingStats:
 
         tile_cache = tile_cache_info()
         ann_cache = ann_index_cache_info()
+        # live-corpus probes outside the stats lock too: they read the
+        # corpus's atomically-swapped snapshot, no lock ordering to trip
+        live_now = {name: fn() for name, fn in list(self._live_fns.items())}
         with self._lock:
             endpoints = {}
             total = 0
             for name, ep in self._endpoints.items():
                 depth = self._depth_fns.get(name, lambda: 0)()
+                live = live_now.get(name, {})
                 endpoints[name] = EndpointSnapshot(
                     name=name,
                     n_requests=ep.n_requests,
@@ -252,6 +274,14 @@ class ServingStats:
                     profile=self._profiles.get(name),
                     tile_cache=tile_cache,
                     ann_index_cache=ann_cache,
+                    generation=live.get("generation"),
+                    segment_rows=live.get("segment_rows"),
+                    tombstones=live.get("tombstones"),
+                    compactions=live.get("compactions"),
+                    compaction=(LatencySummary.from_samples(
+                        live["compaction_s"])
+                        if "compaction_s" in live else None),
+                    snapshot_age_s=live.get("snapshot_age_s"),
                 )
                 total += ep.n_requests
             return ServiceSnapshot(

@@ -1,0 +1,146 @@
+"""Randomized mutation schedules + the frozen-equivalence oracle for the
+live tier (``tests/test_live.py``, CI's ``live`` marker step).
+
+A *schedule* is a concrete list of mutation ops —
+
+    ("insert", rows)            rows: (m, d) float32
+    ("delete", ids)             ids:  (m,) int64, all live at apply time
+    ("upsert", ids, rows)       replace-or-insert under stable ids
+
+— generated from one integer seed by *simulating* ``LiveCorpus``'s
+sequential id assignment, so the same seed always produces the same
+logical history and the harness knows every id the corpus will assign
+without reaching into its internals.  ``simulate_live_ids`` re-derives
+the expected live-id set independently of the corpus (the oracle for
+id-stability / tombstone-visibility properties), and ``frozen_oracle``
+builds the ground truth the one invariant of the live tier is stated
+against: searching a **freshly materialized** corpus at the same logical
+state must agree with ``live_topk`` — bit-identically for exact
+backends, within the measured-recall contract for ANN mains.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import segments
+from repro.core.brute_force import TopK
+
+__all__ = [
+    "apply_schedule",
+    "assert_live_equals_frozen",
+    "assert_topk_equal",
+    "frozen_oracle",
+    "random_schedule",
+    "simulate_live_ids",
+]
+
+
+def random_schedule(seed: int, n_ops: int, dim: int, n0: int, *,
+                    max_batch: int = 4, min_live: int = 0,
+                    kinds: Sequence[str] = ("insert", "delete", "upsert"),
+                    row_fn=None) -> List[Tuple]:
+    """A deterministic list of mutation ops for a corpus that starts with
+    ``n0`` rows (ids ``0..n0-1``).  ``min_live`` floors the live count
+    (deletes/upserts are only generated above it — ``min_live=0`` lets a
+    schedule empty the corpus, exercising the degenerate-tail path).
+    ``row_fn(rng, m) -> (m, dim) array`` overrides the default gaussian
+    rows (e.g. to keep planted-cluster geometry for ANN gates)."""
+    rng = np.random.default_rng(seed)
+    live = list(range(n0))
+    next_id = n0
+    ops: List[Tuple] = []
+
+    def rows(m: int) -> np.ndarray:
+        if row_fn is not None:
+            return np.asarray(row_fn(rng, m), dtype=np.float32)
+        return rng.standard_normal((m, dim)).astype(np.float32)
+
+    for _ in range(n_ops):
+        legal = [k for k in kinds
+                 if k == "insert" or len(live) > min_live]
+        kind = legal[int(rng.integers(len(legal)))]
+        if kind == "insert":
+            m = int(rng.integers(1, max_batch + 1))
+            ops.append(("insert", rows(m)))
+            live.extend(range(next_id, next_id + m))
+            next_id += m
+        elif kind == "delete":
+            m = int(rng.integers(
+                1, min(max_batch, len(live) - min_live) + 1))
+            ids = np.sort(rng.choice(live, size=m,
+                                     replace=False)).astype(np.int64)
+            ops.append(("delete", ids))
+            gone = {int(i) for i in ids}
+            live = [i for i in live if i not in gone]
+        else:                       # upsert of existing ids
+            m = int(rng.integers(1, min(max_batch, len(live)) + 1))
+            ids = rng.choice(live, size=m, replace=False).astype(np.int64)
+            ops.append(("upsert", ids, rows(m)))
+    return ops
+
+
+def apply_schedule(live_corpus, ops: Sequence[Tuple]):
+    """Drive a ``LiveCorpus`` through a schedule; returns the corpus."""
+    for op in ops:
+        if op[0] == "insert":
+            live_corpus.insert(jnp.asarray(op[1]))
+        elif op[0] == "delete":
+            live_corpus.delete(op[1])
+        elif op[0] == "upsert":
+            live_corpus.upsert(op[1], jnp.asarray(op[2]))
+        else:
+            raise ValueError(f"unknown op {op[0]!r}")
+    return live_corpus
+
+
+def simulate_live_ids(n0: int, ops: Sequence[Tuple]) -> set:
+    """The expected live-id set after a schedule, re-derived without
+    touching the corpus — the independent oracle for visibility and
+    id-stability assertions."""
+    live = set(range(n0))
+    next_id = n0
+    for op in ops:
+        if op[0] == "insert":
+            m = len(op[1])
+            live.update(range(next_id, next_id + m))
+            next_id += m
+        elif op[0] == "delete":
+            live.difference_update(int(i) for i in op[1])
+        else:
+            live.update(int(i) for i in op[1])
+    return live
+
+
+def frozen_oracle(space, snap, queries, k: int,
+                  backend="reference") -> TopK:
+    """Ground truth at one logical state: search a freshly materialized
+    (fresh-built, single-segment, zero-tombstone) corpus."""
+    corpus, ids = segments.materialize(snap)
+    return segments.frozen_topk(space, corpus, ids, queries, k, backend)
+
+
+def assert_topk_equal(got: TopK, want: TopK, ctx: str = ""):
+    """Bitwise equality of two TopK results (scores and ids)."""
+    np.testing.assert_array_equal(
+        np.asarray(got.scores), np.asarray(want.scores),
+        err_msg=f"scores diverge {ctx}")
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(want.indices),
+        err_msg=f"ids diverge {ctx}")
+
+
+def assert_live_equals_frozen(live_corpus, queries, k: int,
+                              ctx: str = "") -> TopK:
+    """THE live-tier invariant (exact backends): ``live_topk`` over the
+    current snapshot is bit-identical to a fresh-built frozen corpus at
+    the same logical state.  Returns the (verified) result."""
+    snap = live_corpus.snapshot()
+    got = live_corpus.topk(queries, k)
+    want = frozen_oracle(live_corpus.space, snap, queries, k)
+    assert_topk_equal(got, want,
+                      ctx=f"live vs frozen @gen{snap.generation} {ctx}")
+    return got

@@ -478,3 +478,96 @@ class TestParetoBenchArtifact:
         assert any("qps" in e for e in errors)
         assert any("recall" in e and "[0, 1]" in e for e in errors)
         assert any("p99_ms" in e and "p50_ms" in e for e in errors)
+
+
+class TestLiveBenchArtifact:
+    """BENCH_live.json (the live-corpus churn sweep) must satisfy the
+    live_churn schema CI's benchmark smoke job enforces — same
+    synthetic-reference pattern as the classes above, plus the live
+    tier's distinguishing gates: every row's post-compaction recall
+    meets the declared target (churn + compaction did not corrupt the
+    served state) and the generation bookkeeping is coherent
+    (``generation_final >= compactions >= 1`` — the cell really mutated
+    and really compacted)."""
+
+    def _row(self, rate=50.0, interval=0.05, *, identity="reference",
+             recall=1.0, generation=40, compactions=3):
+        return {"write_rate": rate, "compact_interval": interval,
+                "identity": identity, "qps": 100.0, "p50_ms": 5.0,
+                "p99_ms": 20.0, "snapshot_age_p99_ms": 30.0,
+                "post_compaction_recall": recall, "mutations": 80,
+                "generation_final": generation,
+                "compactions": compactions, "tombstones_final": 0}
+
+    def _payload(self, mode="smoke"):
+        rows = [self._row(rate, interval)
+                for rate in (50.0, 200.0) for interval in (0.05,)]
+        return {"bench": "live_churn", "schema": 1, "mode": mode,
+                "n_docs": 512, "dim": 64, "k": 10, "requests": 96,
+                "platform": "cpu", "recall_target": 0.95,
+                "requested": {"write_rates": [50.0, 200.0],
+                              "compact_intervals": [0.05],
+                              "backend": "reference"},
+                "rows": rows}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+        assert validate(self._payload(mode="full")) == []
+
+    def test_local_artifact_validates_when_current(self):
+        from benchmarks.validate_bench import (LIVE_EXPECTED_SCHEMA,
+                                               validate)
+        path = REPO / "BENCH_live.json"
+        if not path.exists():
+            pytest.skip("no local live benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != LIVE_EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/live_churn.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_missing_and_unrequested_cells(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"].pop()
+        assert any("never ran" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"].append(self._row(999.0, 0.05))
+        assert any("never requested" in e for e in validate(payload))
+
+    def test_validator_rejects_fallback_identity(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["identity"] = "graph_ann(ef=64)"
+        assert any("fallback" in e for e in validate(payload))
+
+    def test_validator_enforces_recall_gate_in_every_mode(self):
+        from benchmarks.validate_bench import validate
+        for mode in ("smoke", "full"):
+            payload = copy.deepcopy(self._payload(mode=mode))
+            payload["rows"][1]["post_compaction_recall"] = 0.5
+            assert any("below declared target" in e
+                       for e in validate(payload)), mode
+
+    def test_validator_rejects_incoherent_bookkeeping(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["compactions"] = 0
+        assert any("never compacted" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["generation_final"] = 2
+        assert any("strictly monotone" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["mutations"] = 0
+        assert any("never exercised churn" in e for e in validate(payload))
+
+    def test_validator_rejects_bad_numbers(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["qps"] = 0.0
+        payload["rows"][1]["post_compaction_recall"] = 1.5
+        errors = validate(payload)
+        assert any("qps" in e and "positive" in e for e in errors)
+        assert any("post_compaction_recall" in e and "[0, 1]" in e
+                   for e in errors)

@@ -26,7 +26,8 @@ from repro.core import graph_ann, napp
 from repro.core.backends import (ANN_RECALL_TARGET, GraphANNBackend,
                                  NappBackend, ann_index_cache_info,
                                  available_backends, clear_ann_index_cache,
-                                 make_backend, resolve_backend)
+                                 invalidate_ann_index_entries, make_backend,
+                                 resolve_backend)
 from repro.core.brute_force import TopK, exact_topk
 from repro.core.pipeline import BruteForceGenerator, RetrievalPipeline
 from repro.core.spaces import DenseSpace, FusedSpace, SparseSpace
@@ -424,6 +425,54 @@ class TestIndexCache:
         base = np.asarray(results[0].indices)
         for r in results[1:]:
             np.testing.assert_array_equal(np.asarray(r.indices), base)
+
+    def test_targeted_invalidation_spares_other_corpora(self, dense_data):
+        """The live-corpus mutation path: compaction retires one main
+        segment and calls ``invalidate_ann_index_entries(retired)``,
+        which must drop ONLY entries whose stored corpus IS that object
+        — another endpoint's entry survives and keeps hitting, and the
+        hit/miss counters are preserved (identity-keying makes this
+        generation-keying: every compaction materializes a fresh
+        pytree)."""
+        space, queries, corpus, _ = dense_data
+        clear_ann_index_cache()
+        other = corpus + 1.0            # a different endpoint's corpus
+        backend = GraphANNBackend(rounds=2, degree=8)
+        backend.topk(space, queries, corpus, K)
+        backend.topk(space, queries, other, K)
+        assert ann_index_cache_info()["size"] == 2
+        assert invalidate_ann_index_entries(corpus) == 1
+        info = ann_index_cache_info()
+        assert info["size"] == 1
+        backend.topk(space, queries, other, K)   # survivor still hits
+        after = ann_index_cache_info()
+        assert after["size"] == 1 and after["hits"] == info["hits"] + 1
+        # an object with no entries is a no-op, not an error
+        assert invalidate_ann_index_entries(object()) == 0
+
+    def test_targeted_invalidation_safe_during_other_inflight_builds(
+            self, dense_data):
+        """Racing compactions of one endpoint must never evict or
+        corrupt another endpoint's in-flight index builds/searches: the
+        racing invalidations target a corpus these searches never use,
+        so every result stays recall-correct and the searched corpus
+        keeps exactly one cached entry."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        space, queries, corpus, oracle = dense_data
+        clear_ann_index_cache()
+        backend = GraphANNBackend(rounds=2, degree=8)
+        other = corpus + 1.0            # the "compacting" endpoint
+        with ThreadPoolExecutor(max_workers=4) as ex:
+            futures = [ex.submit(backend.topk, space, queries, corpus, K)
+                       for _ in range(8)]
+            for _ in range(16):
+                invalidate_ann_index_entries(other)
+            results = [f.result(timeout=300) for f in futures]
+        for got in results:
+            assert_recall_contract(oracle, got,
+                                   ctx="targeted-invalidate in-flight")
+        assert ann_index_cache_info()["size"] == 1
 
     def test_clear_during_inflight_search_is_safe(self, dense_data):
         """clear_ann_index_cache concurrent with searches: the searcher
