@@ -40,6 +40,17 @@ claims.  ``validate(payload)`` dispatches on ``payload["bench"]``:
     coherent (``generation_final >= compactions >= 1`` — the cell
     really mutated and really compacted).
 
+``funnel_serve`` (``BENCH_funnel.json``, schema 1)
+    Every *requested* (rerank_keep, budget_ms) cell produced exactly one
+    row, every row's ``identity_ok`` is true (each served answer was
+    bit-identical to the full-funnel or degraded-funnel offline
+    reference — the identity check proves the stages really ran), the
+    fallback bookkeeping is coherent (``0 <= fallbacks <= n_batches``;
+    ``rerank_runs + fallbacks == n_batches``; unbudgeted rows never fall
+    back; occupancy re-derives from the counts), and the per-stage p50s
+    sum to no more than the e2e p50 plus slack (the stages were measured
+    inside the served path, not somewhere else).
+
 ``pareto`` (``BENCH_pareto.json``, schema 1)
     The autotuner's bookkeeping adds up (``pruned + measured ==
     generated``), every grid/front row's endpoint identity starts with
@@ -101,6 +112,20 @@ LIVE_ROW_KEYS = ("write_rate", "compact_interval", "identity", "qps",
                  "generation_final", "compactions", "tombstones_final")
 LIVE_NUMERIC_ROW_KEYS = ("qps", "p50_ms", "p99_ms", "snapshot_age_p99_ms")
 
+FUNNEL_EXPECTED_SCHEMA = 1
+FUNNEL_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "n_docs", "dim",
+                         "requests", "platform", "rerank_cost_ms",
+                         "requested", "rows")
+FUNNEL_ROW_KEYS = ("rerank_keep", "budget_ms", "identity", "qps",
+                   "p50_ms", "p99_ms", "stage_p50_ms", "n_batches",
+                   "rerank_runs", "fallbacks", "overruns", "occupancy",
+                   "identity_ok")
+FUNNEL_STAGE_KEYS = ("candgen", "fusion", "rerank")
+# stage p50s are per-batch medians and e2e includes queue wait, so the
+# sum check needs only a loose ceiling: stages must not report MORE
+# time than the endpoint's e2e tail plus slack
+FUNNEL_STAGE_SUM_SLACK = 1.5, 2.0        # multiplier on e2e p99, +ms
+
 PARETO_EXPECTED_SCHEMA = 1
 PARETO_TOP_LEVEL_KEYS = ("bench", "schema", "mode", "n_docs", "dim", "k",
                          "requests", "seed", "platform", "objectives",
@@ -124,6 +149,8 @@ def validate(payload: dict) -> List[str]:
         return _validate_beam_ann(payload)
     if bench == "live_churn":
         return _validate_live_churn(payload)
+    if bench == "funnel_serve":
+        return _validate_funnel_serve(payload)
     if bench == "pareto":
         return _validate_pareto(payload)
     return _validate_serve_backends(payload)
@@ -457,6 +484,113 @@ def _validate_live_churn(payload: dict) -> List[str]:
     return errors
 
 
+def _validate_funnel_serve(payload: dict) -> List[str]:
+    errors = []
+    for key in FUNNEL_TOP_LEVEL_KEYS:
+        if key not in payload:
+            errors.append(f"missing top-level key {key!r}")
+    if errors:
+        return errors
+    if payload["schema"] != FUNNEL_EXPECTED_SCHEMA:
+        errors.append(f"schema {payload['schema']!r} != "
+                      f"{FUNNEL_EXPECTED_SCHEMA}")
+    mode = payload["mode"]
+    if mode not in ("full", "smoke"):
+        errors.append(f"mode {mode!r} is not 'full' or 'smoke'")
+        return errors
+    requested = payload["requested"]
+    keeps = requested.get("rerank_keeps")
+    budgets = requested.get("budgets_ms")
+    if not keeps:
+        errors.append("requested.rerank_keeps missing or empty")
+    if not budgets or not isinstance(budgets, list):
+        errors.append("requested.budgets_ms missing or empty")
+    if errors:
+        return errors
+    if None not in budgets:
+        errors.append("requested.budgets_ms must include the unbudgeted "
+                      "(null) row — the never-degrade baseline")
+
+    seen = {}
+    for i, row in enumerate(payload["rows"]):
+        missing = [k for k in FUNNEL_ROW_KEYS if k not in row]
+        if missing:
+            errors.append(f"rows[{i}] missing keys {missing}")
+            continue
+        cell = (row["rerank_keep"], row["budget_ms"])
+        if cell in seen:
+            errors.append(f"rows[{i}] duplicates cell {cell}")
+        seen[cell] = row
+        for k in ("qps", "p50_ms", "p99_ms"):
+            if not _positive_finite(row[k]):
+                errors.append(f"rows[{i}].{k} = {row[k]!r} is not a "
+                              "positive finite number")
+        # the contract point, gated in EVERY mode: each served answer
+        # was the full-funnel or degraded-funnel reference, bit for bit
+        if row["identity_ok"] is not True:
+            errors.append(f"rows[{i}] {cell} identity_ok is not true — "
+                          "a served answer matched neither the full nor "
+                          "the degraded offline reference")
+        # fallback-rate coherence: every batch either ran the rerank
+        # stage or was counted as a fallback, nothing lost or invented
+        nb, runs, fb = row["n_batches"], row["rerank_runs"], row["fallbacks"]
+        if not all(isinstance(v, int) and v >= 0 for v in (nb, runs, fb)):
+            errors.append(f"rows[{i}] batch/fallback counters are not "
+                          "non-negative integers")
+            continue
+        if nb < 1:
+            errors.append(f"rows[{i}] served zero batches")
+            continue
+        if fb > nb:
+            errors.append(f"rows[{i}] fallbacks {fb} > n_batches {nb}")
+        if runs + fb != nb:
+            errors.append(
+                f"rows[{i}] rerank_runs {runs} + fallbacks {fb} != "
+                f"n_batches {nb} — a batch neither ran the rerank stage "
+                "nor was counted as degraded")
+        if row["budget_ms"] is None and fb != 0:
+            errors.append(f"rows[{i}] unbudgeted row reports {fb} "
+                          "fallbacks — degradation without a budget")
+        if abs(row["occupancy"] - runs / nb) > 1e-6:
+            errors.append(f"rows[{i}] occupancy {row['occupancy']} != "
+                          f"rerank_runs/n_batches {runs / nb:.6f}")
+        if row["overruns"] > runs:
+            errors.append(f"rows[{i}] overruns {row['overruns']} > "
+                          f"rerank_runs {runs} — an overrun needs a run")
+        # the stages were measured inside the served path: their p50s
+        # cannot sum past the e2e tail (+ slack for per-batch medians
+        # vs per-request e2e and timer quantization)
+        stages = row["stage_p50_ms"]
+        if not isinstance(stages, dict) or \
+                set(stages) != set(FUNNEL_STAGE_KEYS):
+            errors.append(f"rows[{i}].stage_p50_ms does not cover "
+                          f"{FUNNEL_STAGE_KEYS}")
+        else:
+            for s in ("candgen", "fusion"):
+                if not _positive_finite(stages[s]):
+                    errors.append(f"rows[{i}].stage_p50_ms[{s!r}] = "
+                                  f"{stages[s]!r} is not positive finite"
+                                  " — a mandatory stage never ran")
+            total = sum(v for v in stages.values()
+                        if isinstance(v, (int, float)))
+            mult, slack_ms = FUNNEL_STAGE_SUM_SLACK
+            if total > mult * row["p99_ms"] + slack_ms:
+                errors.append(
+                    f"rows[{i}] stage p50s sum to {total:.2f}ms, beyond "
+                    f"e2e p99 {row['p99_ms']:.2f}ms x {mult} + "
+                    f"{slack_ms}ms — stages not measured in-path")
+
+    for keep in keeps:
+        for budget in budgets:
+            if (keep, budget) not in seen:
+                errors.append(f"requested cell ({keep}, {budget}) "
+                              "never ran")
+    for cell in seen:
+        if cell[0] not in keeps or cell[1] not in budgets:
+            errors.append(f"row cell {cell} was never requested")
+    return errors
+
+
 def _pareto_objectives(row) -> tuple:
     """Maximization vector re-derived from a row — must match
     ``MeasuredPoint.objectives``: (qps, -p99_ms, recall)."""
@@ -635,6 +769,11 @@ def main(argv=None) -> int:
               "requested (write_rate x compact_interval) matrix, "
               "post-compaction recall meets target "
               f"{payload['recall_target']}, every cell compacted")
+    elif payload.get("bench") == "funnel_serve":
+        print(f"validate_bench: {path} OK — {n} rows cover the full "
+              "requested (rerank_keep x budget_ms) matrix, two-behavior "
+              "identity held everywhere, fallback counts coherent, "
+              "stage latencies measured in-path")
     elif payload.get("bench") == "ann_tradeoff":
         print(f"validate_bench: {path} OK — {n} rows cover the full "
               "requested (space x method x budget) matrix, max-budget "

@@ -7,9 +7,13 @@ backend, the dense space a second time through the Pallas MIPS kernel,
 a third time from a bf16-resident corpus (``corpus_dtype="bfloat16"``,
 half the HBM footprint, f32 score accumulation), a fourth time
 through the approximate ``graph_ann`` backend (the measured-recall
-tier), and a fifth time as a LIVE corpus (``live=``) that a writer
+tier), a fifth time as a LIVE corpus (``live=``) that a writer
 thread mutates with inserts and deletes while the load generator is
-hitting it — hit by a multi-client load generator.
+hitting it, and a sixth time as the paper's FULL FUNNEL — graph-ANN
+candgen -> the trained LETOR fusion model -> a cross-encoder neural
+rerank, registered through the consolidated ``EndpointSpec`` with a
+per-stage budget, per-stage p50/p99 + fallback counters in the
+snapshot — hit by a multi-client load generator.
 
 Flow: synthetic corpus -> offline indexing (inverted BM25, dense
 projection, fused composite) -> train a LETOR fusion re-ranker AND the
@@ -55,8 +59,13 @@ from repro.core.spaces import (DenseSpace, FusedSpace, FusedVectors,
 from repro.core import segments
 from repro.data.pipeline import pad_tokens
 from repro.data.synthetic import make_corpus, qrels_to_labels
-from repro.serving import RetrievalService, ShardedPipeline
+from repro.distributed.sharding import ParallelCtx
+from repro.models import transformer as T
+from repro.models.encoder import CrossEncoderReranker
+from repro.serving import (EndpointSpec, FunnelPipeline, RetrievalService,
+                           ShardedPipeline, StageBudget)
 from repro.serving.live import LiveCorpus
+from repro import configs as reg
 
 N_CLIENTS = 4
 HOT_FRACTION = 0.3      # share of requests drawn from a small hot set
@@ -182,6 +191,30 @@ def build_service(rc, corpus):
     svc.register_pipeline("dense_live", None, q_dense_all[0],
                           batch_size=16, max_wait_s=0.01, live=live)
 
+    # ... and a SIXTH dense view: the paper's FULL funnel as ONE endpoint
+    # — approximate candgen (graph-ANN over the same dense corpus) -> the
+    # LETOR fusion model trained above -> a cross-encoder neural rerank —
+    # registered through the consolidated EndpointSpec with a per-stage
+    # rerank budget.  Per-stage p50/p99, fallback counters, and batch
+    # occupancy land in EndpointSnapshot.stages; if the rerank stage ever
+    # stops fitting its soft deadline the funnel serves the fused
+    # candidates instead (counted, never an error).
+    tcfg = reg.get_smoke_config("smollm-360m")
+    tparams, _ = T.init_transformer(jax.random.PRNGKey(7), tcfg)
+    d_tokens = jnp.asarray(pad_tokens(corpus.doc_lemmas, 12, v))
+    cross = CrossEncoderReranker(tparams, tcfg, ParallelCtx(None, {}),
+                                 d_tokens)
+    funnel = FunnelPipeline(
+        BruteForceGenerator(DenseSpace("ip"), doc_dense),
+        fusion=reranker, rerank=cross,
+        cand_qty=rc.cand_qty, fusion_qty=16, rerank_keep=10)
+    svc.register_pipeline(
+        "dense_funnel", funnel, q_dense_all[0], q_tokens_all[0],
+        spec=EndpointSpec(batch_size=16, max_wait_s=0.01,
+                          backend=GraphANNBackend(ef=max(64, rc.cand_qty),
+                                                  kernel=True),
+                          budget=StageBudget(rerank_s=2.0)))
+
     # the mixed representation with the LEARNED mixing weights, scored and
     # selected on-device by the fused Pallas kernel (interpret mode
     # off-TPU): backend="pallas" is the whole difference, and the answers
@@ -221,6 +254,7 @@ def build_service(rc, corpus):
         "dense_bf16": lambda i: (q_dense_all[i], None),
         "dense_ann": lambda i: (q_dense_all[i], None),
         "dense_live": lambda i: (q_dense_all[i], None),
+        "dense_funnel": lambda i: (q_dense_all[i], q_tokens_all[i]),
         "fused": fused_repr,
         "fused_sharded": fused_repr,
     }
@@ -424,6 +458,16 @@ def main():
               f"backend {ep.backend or '-'}, "
               f"dtype {ep.corpus_dtype or '-'})  "
               f"e2e p50 {ep.e2e.p50_ms:6.1f} ms  p99 {ep.e2e.p99_ms:6.1f} ms")
+        if ep.stages:          # the funnel endpoint: per-stage breakdown
+            for st in ("candgen", "fusion", "rerank"):
+                s = ep.stages.get(st)
+                if s is None or not s.count:
+                    continue
+                print(f"  {'':>13}  stage {st:>7}: p50 {s.p50_ms:6.1f} ms  "
+                      f"p99 {s.p99_ms:6.1f} ms  "
+                      f"occupancy {ep.stage_occupancy[st]:.0%}  "
+                      f"fallbacks {ep.stage_fallbacks[st]}  "
+                      f"overruns {ep.stage_overruns[st]}")
     print("fused_sharded bit-identical to fused, dense_pallas "
           "bit-identical to dense, dense_bf16 recall@10 == 1.0 vs dense, "
           "dense_ann recall@10 >= target vs dense, dense_live recall@10 "
@@ -432,6 +476,18 @@ def main():
     print(f"sparse funnel MRR@10 {m:.3f}")
     assert m > 0.3
     assert snap.cache_hits > 0
+
+    # the staged funnel really ran all three stages under load: every
+    # batch generated candidates and fused them, and with the generous
+    # rerank budget the neural stage never fell back
+    fep = snap.endpoints["dense_funnel"]
+    assert set(fep.stages) == {"candgen", "fusion", "rerank"}
+    assert fep.stage_occupancy["candgen"] == 1.0
+    assert fep.stage_fallbacks["rerank"] == 0, \
+        "generous rerank budget should never degrade"
+    print(f"dense_funnel served {fep.n_requests} requests through all "
+          f"three stages (rerank occupancy "
+          f"{fep.stage_occupancy['rerank']:.0%}, 0 fallbacks)")
 
 
 if __name__ == "__main__":

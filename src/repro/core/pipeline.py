@@ -38,8 +38,25 @@ __all__ = [
     "LinearReranker",
     "TreeReranker",
     "apply_rerankers",
+    "pin_snapshot",
     "RetrievalPipeline",
 ]
+
+
+def pin_snapshot(generator: "CandidateGenerator") -> "CandidateGenerator":
+    """Resolve the live-corpus snapshot seam once for a unit of work.
+
+    Live-corpus generators expose ``bind_snapshot()``
+    (:class:`repro.serving.live.LiveGenerator`): calling it acquires one
+    immutable snapshot, so everything computed from the returned
+    generator — the candidate stage *and* any downstream rerank stages
+    reading its row ids — sees a single consistent corpus state even
+    while writers and compactors race.  Frozen generators have no such
+    seam and are returned as-is.  Shared by :class:`RetrievalPipeline`,
+    :class:`repro.serving.sharded.ShardedPipeline` (per shard), and the
+    staged :class:`repro.serving.funnel.FunnelPipeline`."""
+    bind = getattr(generator, "bind_snapshot", None)
+    return generator if bind is None else bind()
 
 
 class CandidateGenerator(Protocol):
@@ -272,17 +289,15 @@ class RetrievalPipeline:
     interm_qty: int = 50
     final_qty: int = 10
 
+    def generate_candidates(self, query_repr, k: Optional[int] = None) -> TopK:
+        """The candidate stage alone, with the live-snapshot seam
+        resolved (:func:`pin_snapshot`) — the seam the serving layer's
+        staged funnel times independently of the rerank tail."""
+        return pin_snapshot(self.generator).generate(
+            query_repr, self.cand_qty if k is None else k)
+
     def run(self, query_repr, q_tokens: Optional[jax.Array] = None) -> TopK:
-        generator = self.generator
-        # Live-corpus generators expose bind_snapshot(): acquire one
-        # immutable snapshot for the whole batch, so a concurrent
-        # mutation or compaction can never tear a result
-        # (repro.serving.live.LiveGenerator).  Frozen generators have no
-        # such seam and are used as-is.
-        bind = getattr(generator, "bind_snapshot", None)
-        if bind is not None:
-            generator = bind()
-        cands = generator.generate(query_repr, self.cand_qty)
+        cands = self.generate_candidates(query_repr)
         return apply_rerankers(
             cands, q_tokens, intermediate=self.intermediate, final=self.final,
             interm_qty=self.interm_qty, final_qty=self.final_qty)
@@ -320,29 +335,83 @@ class RetrievalPipeline:
         return dataclasses.replace(
             self, generator=self.generator.with_corpus_dtype(dtype))
 
+    # Historical descriptors spelled the execution-backend keys
+    # inconsistently with the rest of the camelCase vocabulary (candProv,
+    # extrType, candQty, corpusDtype): lowercase "backend" and
+    # "backendParams".  The canonical spellings below follow the
+    # camelCase convention; the legacy keys are still read (and
+    # rewritten) so archived experiment descriptors keep loading.
+    _LEGACY_DESCRIPTOR_KEYS = {"backend": "execBackend",
+                               "backendParams": "execBackendParams"}
+
+    @classmethod
+    def canonicalize_descriptor(cls, desc: dict) -> dict:
+        """Rewrite legacy descriptor keys to their canonical camelCase
+        spellings (``backend`` -> ``execBackend``, ``backendParams`` ->
+        ``execBackendParams``).  A descriptor carrying both spellings
+        with different values is ambiguous and rejected."""
+        canon = dict(desc)
+        for old, new in cls._LEGACY_DESCRIPTOR_KEYS.items():
+            if old in canon:
+                if new in canon and canon[new] != canon[old]:
+                    raise ValueError(
+                        f"descriptor carries both {old!r} and its canonical "
+                        f"spelling {new!r} with different values")
+                canon[new] = canon.pop(old)
+        return canon
+
+    @property
+    def descriptor(self) -> dict:
+        """The canonical experiment descriptor for this pipeline.
+
+        Pipelines built by :meth:`from_descriptor` return the
+        canonicalized form of the descriptor they were built from (legacy
+        keys rewritten — the round-trip regression in
+        ``tests/test_funnel.py``); hand-built pipelines report the
+        reconstructable subset: funnel quantities, the generator's
+        execution-backend identity, and its corpus residency dtype."""
+        stored = getattr(self, "_descriptor", None)
+        if stored is not None:
+            return dict(stored)
+        from repro.core.backends import backend_identity
+
+        desc = {"candQty": self.cand_qty, "intermQty": self.interm_qty,
+                "finalQty": self.final_qty}
+        label = backend_identity(self.backend)
+        if label is not None:
+            desc["execBackend"] = label
+        if self.corpus_dtype is not None:
+            desc["corpusDtype"] = self.corpus_dtype
+        return desc
+
     @classmethod
     def from_descriptor(cls, desc: dict, context: dict) -> "RetrievalPipeline":
         """Paper Fig. 4 experiment descriptor.  Recognised keys:
-        candProv (name into context), backend (execution backend name for
-        the candidate stage), backendParams (constructor kwargs for a
-        *named* backend, e.g. ``{"ef": 128}`` for graph_ann — requires
-        ``backend``), corpusDtype (corpus residency dtype for the
-        candidate stage), extrType / extrTypeInterm (extractor configs),
-        model / modelInterm (weight arrays or ensembles), candQty /
-        intermQty / finalQty."""
+        candProv (name into context), execBackend (execution backend name
+        for the candidate stage; legacy spelling ``backend`` still read),
+        execBackendParams (constructor kwargs for a *named* backend, e.g.
+        ``{"ef": 128}`` for graph_ann — requires ``execBackend``; legacy
+        spelling ``backendParams``), corpusDtype (corpus residency dtype
+        for the candidate stage), extrType / extrTypeInterm (extractor
+        configs), model / modelInterm (weight arrays or ensembles),
+        candQty / intermQty / finalQty."""
         from repro.core.backends import make_backend
         from repro.core.fusion import ObliviousTreeEnsemble
 
+        desc = cls.canonicalize_descriptor(desc)
         gen = context[desc.get("candProv", "candidate_provider")]
         if "corpusDtype" in desc:            # cast before backend
             gen = gen.with_corpus_dtype(desc["corpusDtype"])   # resolution
-        params = desc.get("backendParams")
-        if params and "backend" not in desc:
-            raise ValueError("descriptor key 'backendParams' requires "
-                             "'backend' to name the backend it configures")
-        if "backend" in desc:
-            gen = gen.with_backend(make_backend(desc["backend"], **params)
-                                   if params else desc["backend"])
+        params = desc.get("execBackendParams")
+        if params and "execBackend" not in desc:
+            raise ValueError("descriptor key 'execBackendParams' (legacy "
+                             "spelling 'backendParams') requires "
+                             "'execBackend' to name the backend it "
+                             "configures")
+        if "execBackend" in desc:
+            gen = gen.with_backend(
+                make_backend(desc["execBackend"], **params)
+                if params else desc["execBackend"])
 
         def build(extr_key, model_key):
             if extr_key not in desc:
@@ -353,7 +422,7 @@ class RetrievalPipeline:
                 return TreeReranker(extractor, model)
             return LinearReranker(extractor, jnp.asarray(model))
 
-        return cls(
+        pipe = cls(
             generator=gen,
             intermediate=build("extrTypeInterm", "modelInterm"),
             final=build("extrType", "model"),
@@ -361,3 +430,7 @@ class RetrievalPipeline:
             interm_qty=int(desc.get("intermQty", 50)),
             final_qty=int(desc.get("finalQty", 10)),
         )
+        # remember the canonical source descriptor so .descriptor
+        # round-trips exactly (frozen dataclass: bypass __setattr__)
+        object.__setattr__(pipe, "_descriptor", dict(desc))
+        return pipe

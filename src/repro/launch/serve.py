@@ -1,4 +1,4 @@
-"""Batched retrieval serving driver — COMPAT SHIM.
+"""Batched retrieval serving driver — DEPRECATED COMPAT SHIM.
 
 The real serving subsystem lives in :mod:`repro.serving` (admission queue
 -> continuous batcher -> pipeline -> cache -> stats; see
@@ -7,14 +7,21 @@ The real serving subsystem lives in :mod:`repro.serving` (admission queue
 synchronous ``serve(queries)`` loop backed by a single-endpoint
 :class:`~repro.serving.RetrievalService` with the result cache disabled
 (the old server had none).
+
+Deprecated: construct a :class:`~repro.serving.RetrievalService` and
+register endpoints with an :class:`~repro.serving.EndpointSpec` instead —
+that surface carries every knob this shim hides (admission control,
+caching, profiles, funnel budgets) and serves multiple endpoints.
+Instantiating :class:`BatchingServer` emits a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Sequence
 
-from repro.serving import RetrievalService
+from repro.serving import EndpointSpec, RetrievalService
 
 __all__ = ["ServeStats", "BatchingServer"]
 
@@ -44,6 +51,11 @@ class BatchingServer:
 
     def __init__(self, fn: Callable, batch_size: int, pad_query,
                  window_s: float = 0.005, backend=None):
+        warnings.warn(
+            "launch.serve.BatchingServer is deprecated: register the "
+            "runner on a repro.serving.RetrievalService with an "
+            "EndpointSpec (register_runner(..., spec=EndpointSpec(...)))",
+            DeprecationWarning, stacklevel=2)
         self.fn = fn
         self.batch_size = batch_size
         self.pad_query = pad_query
@@ -53,7 +65,8 @@ class BatchingServer:
         self._service.register_runner(
             "default", lambda batch, _tokens: fn(batch),
             pad_query_repr=pad_query,
-            batch_size=batch_size, max_wait_s=window_s, backend=backend)
+            spec=EndpointSpec(batch_size=batch_size, max_wait_s=window_s,
+                              backend=backend))
 
     def serve(self, queries: Sequence):
         """Serve a stream of single queries; returns per-query results."""

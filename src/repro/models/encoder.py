@@ -6,6 +6,9 @@ assigned model architectures and the retrieval core.
 * ``cross_encoder_score`` — joint (query ++ doc) scoring with a scalar
   head: the neural re-ranker the paper plugs in via proxy scorers
   (CEDR/MatchZoo role), exposed as a ``ProxyExtractor``-compatible callable.
+* ``CrossEncoderReranker`` — the same scorer packaged as a
+  ``core.pipeline.Reranker``: the neural final stage of the served
+  funnel (``repro.serving.funnel.FunnelPipeline``).
 * ``contrastive_loss`` — in-batch-negatives dual-encoder training (the
   DPR objective) so encoders can be *trained* inside this framework.
 """
@@ -61,6 +64,33 @@ def make_proxy_scorer(params, cfg: TransformerConfig, ctx: ParallelCtx,
         return cross_encoder_score(params, flat_q, flat_d, cfg, ctx).reshape(b, c)
 
     return score
+
+
+class CrossEncoderReranker:
+    """Neural re-rank stage: ``cross_encoder_score`` over the candidate
+    documents' tokens, packaged as a ``core.pipeline.Reranker``.
+
+    Gathers ``doc_tokens[cand_ids]``, flattens the (query, candidate)
+    pairs to one ``[B*C]`` batch through the jitted joint scorer
+    (:func:`make_proxy_scorer`'s adapter pattern), masks padded / absent
+    candidates (non-finite candidate scores) to ``-inf``, and reorders —
+    the funnel's final stage, also usable as ``RetrievalPipeline``'s
+    ``final``."""
+
+    def __init__(self, params, cfg: TransformerConfig, ctx: ParallelCtx,
+                 doc_tokens: jax.Array):
+        self.doc_tokens = jnp.asarray(doc_tokens)
+        self._score = make_proxy_scorer(params, cfg, ctx, self.doc_tokens)
+
+    def rerank(self, q_tokens: jax.Array, cands, keep: int):
+        from repro.core.pipeline import _reorder
+
+        mask = jnp.isfinite(cands.scores)
+        # clamp masked ids to row 0 so the gather stays in bounds; their
+        # scores are forced to -inf below regardless of what row 0 scores
+        ids = jnp.where(mask, cands.indices, 0)
+        scores = jnp.where(mask, self._score(q_tokens, ids), -jnp.inf)
+        return _reorder(cands, scores, keep)
 
 
 def contrastive_loss(params, q_tokens: jax.Array, pos_doc_tokens: jax.Array,

@@ -10,15 +10,23 @@ from repro.serving.autotune import (AutotuneResult, MeasuredPoint,
 from repro.serving.batcher import (OVERLOAD_POLICIES, ContinuousBatcher,
                                    Request, ServiceOverloaded)
 from repro.serving.cache import QueryCache, quantized_key
+from repro.serving.funnel import (FUNNEL_STAGES, FunnelPipeline, StageBudget,
+                                  StageTrace)
 from repro.serving.live import LiveCorpus, LiveGenerator, SnapshotGenerator
 from repro.serving.router import Router
 from repro.serving.service import RetrievalService
+from repro.serving.spec import EndpointSpec
 from repro.serving.sharded import CorpusShard, ShardedPipeline, shard_corpus
 from repro.serving.stats import (EndpointSnapshot, LatencySummary,
                                  ServiceSnapshot, ServingStats)
 
 __all__ = [
     "ContinuousBatcher",
+    "EndpointSpec",
+    "FunnelPipeline",
+    "FUNNEL_STAGES",
+    "StageBudget",
+    "StageTrace",
     "Request",
     "ServiceOverloaded",
     "OVERLOAD_POLICIES",

@@ -90,6 +90,10 @@ GENOME_EFS = (16, 32, 64, 128)
 GENOME_HOPS = (None, 2, 4, 8)
 GENOME_NUM_SEARCH = (4, 8, 16)
 GENOME_RERANK = (64, 128, 256)
+# Funnel knobs (only sampled for funnel endpoints — plain genomes keep
+# them None so a pipeline config can never differ in dead funnel genes):
+GENOME_RERANK_KEEP = (10, 20, 50)
+GENOME_RERANK_BUDGETS_MS = (None, 2.0, 5.0, 20.0)
 
 # GraphANNBackend's default graph degree: the proxy's candidate-visit
 # count and the kernel beam-budget legality check both need it.
@@ -133,6 +137,12 @@ class ServingConfig:
     kernel: bool = False
     num_search: Optional[int] = None
     rerank_qty: Optional[int] = None
+    # funnel genes (repro.serving.funnel.FunnelPipeline endpoints):
+    # rerank_keep = served width of the neural rerank stage,
+    # rerank_budget_ms = its soft stage deadline (skip-and-degrade past
+    # it).  Both None for plain (non-funnel) serving configs.
+    rerank_keep: Optional[int] = None
+    rerank_budget_ms: Optional[float] = None
 
     def key(self) -> tuple:
         """Canonical hashable identity (dedup across generations)."""
@@ -247,6 +257,12 @@ def check_config(cfg: ServingConfig, k: int, space=None,
         return (f"pallas serves {PallasBackend._DTYPES} corpora, "
                 f"not {cfg.corpus_dtype}")
 
+    if cfg.rerank_keep is not None and cfg.rerank_keep < k:
+        return (f"funnel rerank_keep={cfg.rerank_keep} cannot serve "
+                f"top-{k}")
+    if cfg.rerank_budget_ms is not None and not cfg.rerank_budget_ms > 0:
+        return "rerank_budget_ms must be positive (or None for unbounded)"
+
     if space is not None and corpus is not None:
         test_corpus = cast_corpus(corpus, canonical_dtype(cfg.corpus_dtype))
         why = cfg.make_backend().supports(space, test_corpus)
@@ -263,7 +279,7 @@ def _choice(rng: np.random.Generator, domain: Sequence):
     return domain[int(rng.integers(len(domain)))]
 
 
-def _knobs_for(backend: str) -> List[str]:
+def _knobs_for(backend: str, funnel: bool = False) -> List[str]:
     knobs = ["backend", "corpus_dtype", "n_shards", "batch_size",
              "max_wait_s", "cache_size", "max_queue", "overload"]
     if backend in ("streaming", "pallas"):
@@ -272,6 +288,8 @@ def _knobs_for(backend: str) -> List[str]:
         knobs += ["ef", "hops", "kernel"]
     if backend == "napp":
         knobs += ["num_search", "rerank_qty"]
+    if funnel:
+        knobs += ["rerank_keep", "rerank_budget_ms"]
     return knobs
 
 
@@ -304,6 +322,10 @@ def _resample(knob: str, rng: np.random.Generator, k: int):
         return _choice(rng, GENOME_NUM_SEARCH)
     if knob == "rerank_qty":
         return _choice(rng, [r for r in GENOME_RERANK if r >= k])
+    if knob == "rerank_keep":
+        return _choice(rng, [r for r in GENOME_RERANK_KEEP if r >= k])
+    if knob == "rerank_budget_ms":
+        return _choice(rng, GENOME_RERANK_BUDGETS_MS)
     raise KeyError(knob)
 
 
@@ -330,6 +352,11 @@ def _repair(d: Dict[str, Any], rng: np.random.Generator,
         d["n_shards"] = 1
     if (d["max_queue"] is not None and d["max_queue"] < d["batch_size"]):
         d["max_queue"] = None
+    if d.get("rerank_keep") is None:
+        # a stage budget without a rerank stage is a dead gene
+        d["rerank_budget_ms"] = None
+    elif d["rerank_keep"] < k:
+        d["rerank_keep"] = _resample("rerank_keep", rng, k)
     cfg = ServingConfig(**d)
     return cfg if check_config(cfg, k) is None else None
 
@@ -342,7 +369,8 @@ def random_config(rng: np.random.Generator, k: int) -> ServingConfig:
                           "batch_size", "max_wait_s", "cache_size",
                           "max_queue", "overload")}
         d.update(tile_n=None, ef=None, hops=None, kernel=False,
-                 num_search=None, rerank_qty=None)
+                 num_search=None, rerank_qty=None,
+                 rerank_keep=None, rerank_budget_ms=None)
         if d["backend"] in ("streaming", "pallas"):
             d["tile_n"] = _resample("tile_n", rng, k)
         if d["backend"] == "graph_ann":
@@ -363,7 +391,8 @@ def mutate(cfg: ServingConfig, rng: np.random.Generator,
     """Resample one applicable knob (repairing scoped genes); returns a
     legal genome, falling back to ``cfg`` itself if 64 attempts fail."""
     for _ in range(64):
-        knob = _choice(rng, _knobs_for(cfg.backend))
+        knob = _choice(rng, _knobs_for(cfg.backend,
+                                       funnel=cfg.rerank_keep is not None))
         d = cfg.to_dict()
         d[knob] = _resample(knob, rng, k)
         new = _repair(d, rng, k)
@@ -849,6 +878,26 @@ class TunedProfile:
         kw = {k: v for k, v in d.items() if k in fields}
         kw["config"] = ServingConfig.from_dict(d["config"])
         return cls(**kw)
+
+    def to_spec(self):
+        """This profile as a consolidated
+        :class:`~repro.serving.spec.EndpointSpec`: the registration-time
+        expansion of a tuned row (backend instance, corpus dtype,
+        batching/admission knobs, and — for funnel genomes — the
+        ``rerank_keep`` width and rerank stage budget), with the profile
+        itself carried for provenance.  ``config.cache_size`` remains a
+        service-level knob."""
+        from repro.serving.funnel import StageBudget
+        from repro.serving.spec import EndpointSpec
+
+        cfg = self.config
+        budget = (StageBudget(rerank_s=cfg.rerank_budget_ms / 1e3)
+                  if cfg.rerank_budget_ms is not None else None)
+        return EndpointSpec(
+            batch_size=cfg.batch_size, max_wait_s=cfg.max_wait_s,
+            max_queue=cfg.max_queue, overload=cfg.overload,
+            backend=cfg.make_backend(), corpus_dtype=cfg.corpus_dtype,
+            profile=self, budget=budget, rerank_keep=cfg.rerank_keep)
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True, indent=2)

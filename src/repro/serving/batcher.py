@@ -278,7 +278,15 @@ class ContinuousBatcher:
         t0 = self._time_fn()
         try:
             stacked, tokens = self._assemble(batch)
-            out = self.run_fn(stacked, tokens)
+            if getattr(self.run_fn, "budget_aware", False):
+                # budget-aware runners (the served funnel) get the time
+                # this batch already spent queued — enforcement starts
+                # at batch close, so an end-to-end budget covers the
+                # request's whole life, not just compute
+                elapsed = max(t0 - min(r.t_admit for r in batch), 0.0)
+                out = self.run_fn(stacked, tokens, elapsed_s=elapsed)
+            else:
+                out = self.run_fn(stacked, tokens)
             out = jax.tree.map(
                 lambda x: np.asarray(jax.block_until_ready(x)), out)
         except Exception as exc:            # noqa: BLE001 — fan out to futures

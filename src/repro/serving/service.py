@@ -45,6 +45,7 @@ and are served even when the endpoint is saturated.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from concurrent.futures import Future
 from typing import Any, Callable, Iterable, List, Optional
@@ -55,9 +56,26 @@ from repro.core.backends import backend_identity
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.cache import QueryCache
 from repro.serving.router import Router
+from repro.serving.spec import EndpointSpec
 from repro.serving.stats import ServiceSnapshot, ServingStats
 
 __all__ = ["RetrievalService"]
+
+# defaults of the legacy keyword registration surface: used to detect a
+# kwarg passed alongside spec= (ambiguous — the spec carries every knob)
+_KWARG_DEFAULTS = dict(batch_size=16, max_wait_s=0.01, jit=False,
+                       max_queue=None, overload="block", backend=None,
+                       corpus_dtype=None, profile=None, live=None,
+                       budget=None, rerank_keep=None)
+
+
+def _no_kwargs_alongside_spec(**kwargs):
+    clashes = sorted(k for k, v in kwargs.items() if v != _KWARG_DEFAULTS[k])
+    if clashes:
+        raise ValueError(
+            f"spec= carries every registration knob; also passing "
+            f"{', '.join(clashes)} is ambiguous — set them on the "
+            f"EndpointSpec (dataclasses.replace) instead")
 
 
 def _pipeline_backend_label(pipeline) -> Optional[str]:
@@ -67,6 +85,9 @@ def _pipeline_backend_label(pipeline) -> Optional[str]:
     if label is not None:
         return label
     gens = getattr(pipeline, "generators", None)    # ShardedPipeline
+    if gens is None:                                # funnel over sharded
+        gens = getattr(getattr(pipeline, "generator", None),
+                       "generators", None)
     if gens:
         ids = sorted({lbl for g in gens
                       if (lbl := backend_identity(getattr(g, "backend",
@@ -130,12 +151,18 @@ class RetrievalService:
     def register_runner(
         self, name: str, run_fn: Callable[[Any, Optional[Any]], Any],
         pad_query_repr: Any, pad_q_tokens: Optional[Any] = None, *,
+        spec: Optional[EndpointSpec] = None,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
         backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
         profile: Optional[Any] = None,
     ) -> "RetrievalService":
-        """``backend`` (a name, identity string, or ExecutionBackend
+        """``spec`` (an :class:`~repro.serving.spec.EndpointSpec`)
+        carries every registration knob as one validated value — the
+        canonical surface.  The loose keywords below remain as a shim
+        that builds the same spec.
+
+        ``backend`` (a name, identity string, or ExecutionBackend
         instance) declares the execution path behind ``run_fn``;
         ``corpus_dtype`` declares its corpus residency dtype (the
         precision tier).  Both are surfaced in stats snapshots and keyed
@@ -152,24 +179,39 @@ class RetrievalService:
         this endpoint's cache keys (provenance).  Note
         ``profile.config.cache_size`` is a *service*-level knob — pass
         it to the :class:`RetrievalService` constructor."""
-        if profile is not None:
-            batch_size = profile.config.batch_size
-            max_wait_s = profile.config.max_wait_s
-            max_queue = profile.config.max_queue
-            overload = profile.config.overload
-            if backend is None:
-                backend = profile.config.make_backend()
-            if corpus_dtype is None:
-                corpus_dtype = profile.config.corpus_dtype
-        if jit:
+        if spec is not None:
+            _no_kwargs_alongside_spec(
+                batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
+                max_queue=max_queue, overload=overload, backend=backend,
+                corpus_dtype=corpus_dtype, profile=profile)
+        elif profile is not None:
+            # historical register_runner asymmetry, kept: explicit
+            # backend/corpus_dtype *labels* override the profile's
+            # (the runner is opaque — nothing is rebound either way)
+            overrides: dict = {"jit": jit}
+            if backend is not None:
+                overrides["backend"] = backend
+            if corpus_dtype is not None:
+                overrides["corpus_dtype"] = corpus_dtype
+            spec = dataclasses.replace(profile.to_spec(), **overrides)
+        else:
+            spec = EndpointSpec.from_kwargs(
+                batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
+                max_queue=max_queue, overload=overload, backend=backend,
+                corpus_dtype=corpus_dtype)
+        if spec.live is not None:
+            raise ValueError(
+                "live endpoints register through register_pipeline: the "
+                "service must own the snapshot-pinning run path")
+        if spec.jit:
             run_fn = jax.jit(run_fn)
         batcher = ContinuousBatcher(
             name, run_fn, pad_query_repr, pad_q_tokens,
-            batch_size=batch_size, max_wait_s=max_wait_s,
-            max_queue=max_queue, overload=overload,
-            backend=backend_identity(backend),
-            corpus_dtype=corpus_dtype,
-            profile=None if profile is None else profile.tag,
+            batch_size=spec.batch_size, max_wait_s=spec.max_wait_s,
+            max_queue=spec.max_queue, overload=spec.overload,
+            backend=backend_identity(spec.backend),
+            corpus_dtype=spec.corpus_dtype,
+            profile=None if spec.profile is None else spec.profile.tag,
             stats=self.stats, on_result=self._on_result,
             time_fn=self._time_fn)
         self.router.register(batcher)
@@ -178,14 +220,33 @@ class RetrievalService:
     def register_pipeline(
         self, name: str, pipeline, pad_query_repr: Any,
         pad_q_tokens: Optional[Any] = None, *,
+        spec: Optional[EndpointSpec] = None,
         batch_size: int = 16, max_wait_s: float = 0.01, jit: bool = False,
         max_queue: Optional[int] = None, overload: str = "block",
         backend: Optional[Any] = None, corpus_dtype: Optional[str] = None,
         profile: Optional[Any] = None, live: Optional[Any] = None,
+        budget: Optional[Any] = None, rerank_keep: Optional[int] = None,
     ) -> "RetrievalService":
-        """Serve a :class:`RetrievalPipeline` (or
-        :class:`~repro.serving.sharded.ShardedPipeline` — anything with a
+        """Serve a :class:`RetrievalPipeline`, a
+        :class:`~repro.serving.sharded.ShardedPipeline`, or a
+        :class:`~repro.serving.funnel.FunnelPipeline` (anything with a
         batched ``run(query_repr, q_tokens)``) as endpoint ``name``.
+
+        ``spec`` (an :class:`~repro.serving.spec.EndpointSpec`) is the
+        canonical registration surface: every knob below, as one frozen
+        validated value.  The loose keywords remain as a shim that
+        builds the same spec (same mutual-exclusion rules).
+
+        A funnel endpoint (the pipeline has ``run_timed``) additionally
+        gets per-stage treatment: each batch's candgen/fusion/rerank
+        stage is timed into the endpoint snapshot's ``stages`` summary,
+        ``budget`` (a :class:`~repro.serving.funnel.StageBudget`) and
+        ``rerank_keep`` rebind the funnel's budgets and served width at
+        registration, and the batcher hands the batch's queue wait to
+        the funnel so the end-to-end budget can degrade the rerank stage
+        (skip-and-serve-fused, counted as ``stage_fallbacks`` — never an
+        error).  Funnel endpoints cannot be jitted: the staged run path
+        times stages and makes budget decisions on the host.
 
         ``backend`` selects the execution path for the pipeline's
         candidate stage (``"reference"`` / ``"streaming"`` / ``"pallas"``
@@ -227,20 +288,23 @@ class RetrievalService:
         mutation or compaction can never surface a stale hit.  Endpoint
         snapshots gain segment row counts, tombstones, compaction
         latency, and snapshot age."""
-        if live is not None:
+        if spec is not None:
+            _no_kwargs_alongside_spec(
+                batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
+                max_queue=max_queue, overload=overload, backend=backend,
+                corpus_dtype=corpus_dtype, profile=profile, live=live,
+                budget=budget, rerank_keep=rerank_keep)
+        else:
+            spec = EndpointSpec.from_kwargs(
+                batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
+                max_queue=max_queue, overload=overload, backend=backend,
+                corpus_dtype=corpus_dtype, profile=profile, live=live,
+                budget=budget, rerank_keep=rerank_keep)
+        if spec.live is not None:
             from repro.core.pipeline import RetrievalPipeline
             from repro.serving.live import LiveGenerator
 
-            if backend is not None or corpus_dtype is not None \
-                    or profile is not None:
-                raise ValueError(
-                    "live= is mutually exclusive with backend=, "
-                    "corpus_dtype=, and profile=: a LiveCorpus declares "
-                    "its own backends and residency dtype")
-            if jit:
-                raise ValueError(
-                    "live endpoints cannot be jitted: the run path pins "
-                    "snapshots and reads host state per batch")
+            live = spec.live
             if pipeline is None:
                 pipeline = RetrievalPipeline(generator=LiveGenerator(live))
             generator = getattr(pipeline, "generator", None)
@@ -248,46 +312,39 @@ class RetrievalService:
                     or generator.live is not live:
                 raise ValueError(
                     "live= requires pipeline=None or a RetrievalPipeline "
-                    "whose generator is a LiveGenerator over the same "
-                    "LiveCorpus")
+                    "/ FunnelPipeline whose generator is a LiveGenerator "
+                    "over the same LiveCorpus")
+            pipeline, is_funnel = self._bind_funnel_knobs(pipeline, spec)
+            run_fn = (self._funnel_run_fn(name, pipeline) if is_funnel
+                      else pipeline.run)
             self.register_runner(
-                name, pipeline.run, pad_query_repr, pad_q_tokens,
-                batch_size=batch_size, max_wait_s=max_wait_s,
-                max_queue=max_queue, overload=overload,
-                backend=backend_identity(live.main_backend),
-                corpus_dtype=live.corpus_dtype)
+                name, run_fn, pad_query_repr, pad_q_tokens,
+                spec=dataclasses.replace(
+                    spec, live=None,
+                    backend=backend_identity(live.main_backend),
+                    corpus_dtype=live.corpus_dtype))
             self.stats.register_endpoint(name, live_fn=live.live_stats)
             self._live_endpoints[name] = (
                 live, lambda: generator.last_served_generation)
             return self
-        if profile is not None:
-            if backend is not None or corpus_dtype is not None:
-                raise ValueError(
-                    "profile= supplies backend and corpus_dtype; passing "
-                    "them explicitly alongside a profile would serve a "
-                    "config the profile never measured")
+        if spec.profile is not None:
             n_shards = getattr(pipeline, "n_shards", 1)
-            if n_shards != profile.config.n_shards:
+            if n_shards != spec.profile.config.n_shards:
                 raise ValueError(
                     f"profile was tuned for n_shards="
-                    f"{profile.config.n_shards} but the pipeline has "
+                    f"{spec.profile.config.n_shards} but the pipeline has "
                     f"{n_shards} shard(s)")
-            backend = profile.config.make_backend()
-            corpus_dtype = profile.config.corpus_dtype
-            batch_size = profile.config.batch_size
-            max_wait_s = profile.config.max_wait_s
-            max_queue = profile.config.max_queue
-            overload = profile.config.overload
+        pipeline, is_funnel = self._bind_funnel_knobs(pipeline, spec)
         original = pipeline
-        if corpus_dtype is not None:
+        if spec.corpus_dtype is not None:
             if not hasattr(pipeline, "with_corpus_dtype"):
                 raise TypeError(
                     f"pipeline {type(pipeline).__name__} does not take a "
                     "corpus residency dtype (no with_corpus_dtype); "
                     "register it via register_runner(corpus_dtype=...) if "
                     "you only want the label in stats/cache keys")
-            pipeline = pipeline.with_corpus_dtype(corpus_dtype)
-        if backend is not None:
+            pipeline = pipeline.with_corpus_dtype(spec.corpus_dtype)
+        if spec.backend is not None:
             if not hasattr(pipeline, "with_backend"):
                 raise TypeError(
                     f"pipeline {type(pipeline).__name__} does not take an "
@@ -295,7 +352,7 @@ class RetrievalService:
                     "register_runner(backend=...) if you only want the "
                     "label in stats/cache keys")
             intermediate = pipeline
-            pipeline = pipeline.with_backend(backend)
+            pipeline = pipeline.with_backend(spec.backend)
             # a dtype rebind of a sharded pipeline owns a worker pool the
             # backend rebind replaced: retire the intermediate now
             if intermediate is not original and hasattr(intermediate,
@@ -305,18 +362,70 @@ class RetrievalService:
             self._owned_pipelines.append(pipeline)
         label = _pipeline_backend_label(pipeline)
         if label is None:
-            label = backend_identity(backend)
+            label = backend_identity(spec.backend)
         dtype_label = _pipeline_corpus_dtype(pipeline)
         if dtype_label is None:
-            dtype_label = corpus_dtype
+            dtype_label = spec.corpus_dtype
 
-        def run_fn(query_repr, q_tokens):
-            return pipeline.run(query_repr, q_tokens)
+        if is_funnel:
+            run_fn = self._funnel_run_fn(name, pipeline)
+        else:
+            def run_fn(query_repr, q_tokens):
+                return pipeline.run(query_repr, q_tokens)
         return self.register_runner(
             name, run_fn, pad_query_repr, pad_q_tokens,
-            batch_size=batch_size, max_wait_s=max_wait_s, jit=jit,
-            max_queue=max_queue, overload=overload, backend=label,
-            corpus_dtype=dtype_label, profile=profile)
+            spec=dataclasses.replace(spec, backend=label,
+                                     corpus_dtype=dtype_label))
+
+    @staticmethod
+    def _bind_funnel_knobs(pipeline, spec: EndpointSpec):
+        """Apply the spec's funnel knobs (``rerank_keep`` width, stage
+        ``budget``) to a :class:`~repro.serving.funnel.FunnelPipeline`;
+        returns ``(pipeline, is_funnel)``.  Non-funnel pipelines reject
+        funnel knobs so a budget can never be silently inert."""
+        is_funnel = hasattr(pipeline, "run_timed")
+        if not is_funnel:
+            if spec.budget is not None or spec.rerank_keep is not None:
+                raise ValueError(
+                    "budget= / rerank_keep= are funnel knobs: they apply "
+                    "to FunnelPipeline endpoints (this pipeline has no "
+                    "run_timed stage seam)")
+            return pipeline, False
+        if spec.jit:
+            raise ValueError(
+                "funnel endpoints cannot be jitted: the staged run path "
+                "times stages and makes budget decisions on the host")
+        if spec.rerank_keep is not None:
+            pipeline = pipeline.with_rerank_keep(spec.rerank_keep)
+        if spec.budget is not None:
+            pipeline = pipeline.with_budget(spec.budget)
+        return pipeline, True
+
+    def _funnel_run_fn(self, name: str, funnel):
+        """The batched runner for a funnel endpoint: runs the staged
+        funnel and records per-stage seconds / fallbacks / overruns into
+        this service's stats.  Marked ``budget_aware`` so the batcher
+        hands over the batch's queue wait (``elapsed_s``) — budget
+        enforcement starts at batch close, not at stage one."""
+        stats = self.stats
+
+        def run_fn(query_repr, q_tokens, *, elapsed_s: float = 0.0):
+            out, trace = funnel.run_timed(query_repr, q_tokens,
+                                          elapsed_s=elapsed_s)
+            stats.record_stage(name, "candgen", trace.candgen_s,
+                               overrun="candgen" in trace.overruns)
+            if trace.fusion_s is not None:
+                stats.record_stage(name, "fusion", trace.fusion_s,
+                                   overrun="fusion" in trace.overruns)
+            if trace.rerank_s is not None:
+                stats.record_stage(name, "rerank", trace.rerank_s,
+                                   overrun="rerank" in trace.overruns)
+            elif trace.fallback:
+                stats.record_stage(name, "rerank", None, fallback=True)
+            return out
+
+        run_fn.budget_aware = True
+        return run_fn
 
     def endpoints(self):
         return self.router.endpoints()

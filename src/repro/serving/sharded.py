@@ -45,7 +45,8 @@ import jax
 
 from repro.core.backends import resolve_backend
 from repro.core.brute_force import TopK, concat_topk, merge_topk
-from repro.core.pipeline import BruteForceGenerator, apply_rerankers
+from repro.core.pipeline import (BruteForceGenerator, apply_rerankers,
+                                 pin_snapshot)
 from repro.core.spaces import canonical_dtype, cast_corpus
 
 __all__ = ["CorpusShard", "shard_corpus", "ShardedPipeline"]
@@ -242,13 +243,12 @@ class ShardedPipeline:
     def generate(self, query_repr, k: Optional[int] = None) -> TopK:
         """Global top-k candidates from the sharded generator stage."""
         k = self.cand_qty if k is None else k
-        # Live-corpus shard generators expose bind_snapshot(): pin every
-        # shard's snapshot up front, before the fan-out, so one batch
-        # sees a mutually consistent set of per-shard states even while
-        # writers and compactors race the query threads
-        # (repro.serving.live.LiveGenerator).
-        generators = [g.bind_snapshot() if hasattr(g, "bind_snapshot") else g
-                      for g in self.generators]
+        # Live-corpus shard generators are pinned up front, before the
+        # fan-out, so one batch sees a mutually consistent set of
+        # per-shard states even while writers and compactors race the
+        # query threads (the pin_snapshot seam shared with
+        # RetrievalPipeline and the serving funnel).
+        generators = [pin_snapshot(g) for g in self.generators]
 
         def one(gen, shard: CorpusShard) -> TopK:
             local = gen.generate(query_repr, min(k, shard.n_rows))

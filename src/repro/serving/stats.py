@@ -110,6 +110,19 @@ class EndpointSnapshot:
     compactions: Optional[int] = None
     compaction: Optional[LatencySummary] = None
     snapshot_age_s: Optional[float] = None
+    # staged-funnel observability (None on endpoints that don't record
+    # stages): per-stage latency percentiles over batch executions
+    # ({"candgen": ..., "fusion": ..., "rerank": ...}), exact lifetime
+    # fallback counters (a stage was *skipped* under its budget — the
+    # batch was served from the previous stage's output), exact lifetime
+    # overrun counters (the stage ran but blew its soft deadline), and
+    # per-stage batch occupancy — the fraction of batches that executed
+    # the stage (a rerank occupancy of 0.7 with fallbacks covering the
+    # other 0.3 is a funnel degrading under load, never silently)
+    stages: Optional[Dict[str, LatencySummary]] = None
+    stage_fallbacks: Optional[Dict[str, int]] = None
+    stage_overruns: Optional[Dict[str, int]] = None
+    stage_occupancy: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +156,13 @@ class _EndpointStats:
         self.queue_wait_total_s = 0.0
         self.execute_total_s = 0.0
         self.overload = collections.Counter()   # "rejected" / "shed"
+        # staged-funnel recorders, keyed by stage name ("candgen" /
+        # "fusion" / "rerank"): latency reservoirs, exact execution /
+        # fallback / overrun counters
+        self.stage_lat: Dict[str, collections.deque] = {}
+        self.stage_runs = collections.Counter()
+        self.stage_fallbacks = collections.Counter()
+        self.stage_overruns = collections.Counter()
 
 
 class ServingStats:
@@ -233,6 +253,27 @@ class ServingStats:
         with self._lock:
             self._ep(endpoint).overload[kind] += 1
 
+    def record_stage(self, endpoint: str, stage: str,
+                     seconds: Optional[float] = None, *,
+                     fallback: bool = False, overrun: bool = False):
+        """One funnel stage's outcome for one batch.  ``seconds`` set
+        means the stage executed (latency sample + occupancy count);
+        ``fallback`` means it was skipped under its budget and the batch
+        was served from the previous stage's output; ``overrun`` means it
+        ran but exceeded its soft deadline.  Called from batcher worker
+        threads via the funnel run wrapper."""
+        with self._lock:
+            ep = self._ep(endpoint)
+            if seconds is not None:
+                ep.stage_lat.setdefault(
+                    stage, collections.deque(maxlen=_RESERVOIR)
+                ).append(seconds)
+                ep.stage_runs[stage] += 1
+            if fallback:
+                ep.stage_fallbacks[stage] += 1
+            if overrun:
+                ep.stage_overruns[stage] += 1
+
     # -- read path ----------------------------------------------------------
     def snapshot(self) -> ServiceSnapshot:
         # outside the lock: the warm-cache counters have their own locks,
@@ -251,6 +292,11 @@ class ServingStats:
             for name, ep in self._endpoints.items():
                 depth = self._depth_fns.get(name, lambda: 0)()
                 live = live_now.get(name, {})
+                staged = bool(ep.stage_lat or ep.stage_fallbacks
+                              or ep.stage_overruns)
+                stage_names = (set(ep.stage_lat) | set(ep.stage_runs)
+                               | set(ep.stage_fallbacks)
+                               | set(ep.stage_overruns))
                 endpoints[name] = EndpointSnapshot(
                     name=name,
                     n_requests=ep.n_requests,
@@ -282,6 +328,19 @@ class ServingStats:
                         live["compaction_s"])
                         if "compaction_s" in live else None),
                     snapshot_age_s=live.get("snapshot_age_s"),
+                    stages=({s: LatencySummary.from_samples(d)
+                             for s, d in ep.stage_lat.items()}
+                            if staged else None),
+                    stage_fallbacks=({s: ep.stage_fallbacks[s]
+                                      for s in stage_names}
+                                     if staged else None),
+                    stage_overruns=({s: ep.stage_overruns[s]
+                                     for s in stage_names}
+                                    if staged else None),
+                    stage_occupancy=({s: (ep.stage_runs[s] / ep.n_batches
+                                          if ep.n_batches else 0.0)
+                                      for s in stage_names}
+                                     if staged else None),
                 )
                 total += ep.n_requests
             return ServiceSnapshot(

@@ -571,3 +571,111 @@ class TestLiveBenchArtifact:
         assert any("qps" in e and "positive" in e for e in errors)
         assert any("post_compaction_recall" in e and "[0, 1]" in e
                    for e in errors)
+
+
+class TestFunnelBenchArtifact:
+    """BENCH_funnel.json (the served-funnel rerank_keep x budget sweep)
+    must satisfy the funnel_serve schema CI's benchmark smoke job
+    enforces — same synthetic-reference pattern as the classes above,
+    plus the funnel tier's distinguishing gates: every row's two-behavior
+    identity held (each served answer was the full-funnel or degraded
+    offline reference), the fallback bookkeeping is coherent
+    (``rerank_runs + fallbacks == n_batches``, unbudgeted rows never
+    fall back, occupancy re-derives), and the per-stage latencies were
+    measured inside the served path."""
+
+    def _row(self, keep=5, budget_ms=None, *, n_batches=12, runs=None,
+             fallbacks=0, overruns=0):
+        runs = n_batches - fallbacks if runs is None else runs
+        return {"rerank_keep": keep, "budget_ms": budget_ms,
+                "identity": "reference", "qps": 500.0, "p50_ms": 2.0,
+                "p99_ms": 8.0,
+                "stage_p50_ms": {"candgen": 0.5, "fusion": 0.3,
+                                 "rerank": 1.0 if runs else None},
+                "n_batches": n_batches, "rerank_runs": runs,
+                "fallbacks": fallbacks, "overruns": overruns,
+                "occupancy": runs / n_batches, "identity_ok": True}
+
+    def _payload(self, mode="smoke"):
+        rows = [self._row(5, None),
+                self._row(5, 0.5, fallbacks=12, runs=0),
+                self._row(5, 50.0)]
+        return {"bench": "funnel_serve", "schema": 1, "mode": mode,
+                "n_docs": 512, "dim": 64, "requests": 48,
+                "platform": "cpu", "rerank_cost_ms": 2.0,
+                "requested": {"rerank_keeps": [5],
+                              "budgets_ms": [None, 0.5, 50.0]},
+                "rows": rows}
+
+    def test_reference_payload_validates(self):
+        from benchmarks.validate_bench import validate
+        assert validate(self._payload()) == []
+        assert validate(self._payload(mode="full")) == []
+
+    def test_local_artifact_validates_when_current(self):
+        from benchmarks.validate_bench import (FUNNEL_EXPECTED_SCHEMA,
+                                               validate)
+        path = REPO / "BENCH_funnel.json"
+        if not path.exists():
+            pytest.skip("no local funnel benchmark artifact")
+        payload = json.loads(path.read_text())
+        if payload.get("schema") != FUNNEL_EXPECTED_SCHEMA:
+            pytest.skip("artifact predates the current schema; "
+                        "regenerate with benchmarks/funnel_bench.py")
+        assert validate(payload) == []
+
+    def test_validator_rejects_missing_and_unrequested_cells(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"].pop()
+        assert any("never ran" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"].append(self._row(99, None))
+        assert any("never requested" in e for e in validate(payload))
+
+    def test_validator_enforces_identity_in_every_mode(self):
+        from benchmarks.validate_bench import validate
+        for mode in ("smoke", "full"):
+            payload = copy.deepcopy(self._payload(mode=mode))
+            payload["rows"][0]["identity_ok"] = False
+            assert any("identity_ok" in e for e in validate(payload)), mode
+
+    def test_validator_rejects_incoherent_fallback_counts(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][2]["fallbacks"] = 3      # runs + fallbacks != nb
+        assert any("neither ran the rerank stage" in e
+                   for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["fallbacks"] = 2      # unbudgeted row degraded
+        payload["rows"][0]["rerank_runs"] = 10
+        payload["rows"][0]["occupancy"] = 10 / 12
+        assert any("degradation without a budget" in e
+                   for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["occupancy"] = 0.25
+        assert any("occupancy" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][1]["overruns"] = 5       # overrun without a run
+        assert any("needs a run" in e for e in validate(payload))
+
+    def test_validator_rejects_out_of_path_stage_latencies(self):
+        """Stage p50s summing far past the e2e tail mean the stages were
+        timed somewhere other than the served path."""
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["stage_p50_ms"]["rerank"] = 500.0
+        assert any("not measured in-path" in e for e in validate(payload))
+
+    def test_validator_requires_unbudgeted_baseline_and_stages(self):
+        from benchmarks.validate_bench import validate
+        payload = copy.deepcopy(self._payload())
+        payload["requested"]["budgets_ms"] = [0.5, 50.0]
+        payload["rows"] = payload["rows"][1:]
+        assert any("never-degrade baseline" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        del payload["rows"][0]["stage_p50_ms"]["fusion"]
+        assert any("stage_p50_ms" in e for e in validate(payload))
+        payload = copy.deepcopy(self._payload())
+        payload["rows"][0]["stage_p50_ms"]["candgen"] = None
+        assert any("mandatory stage" in e for e in validate(payload))

@@ -1,0 +1,559 @@
+"""The served funnel: candgen -> learned fusion -> neural rerank as ONE
+endpoint, under per-stage budgets.
+
+Contract families (CI runs this file via the ``funnel`` marker step):
+
+* **Identity** — a ``FunnelPipeline`` (offline and served through a
+  ``RetrievalService``) answers bit-identically to the offline
+  ``apply_rerankers`` composition over the same candidate stage; the
+  degraded (rerank-skipped) result is exactly the fused ranking
+  truncated to the serve width, never a third behavior.
+* **Budgets** — an injected-slow rerank stage under a tight
+  ``StageBudget`` degrades deterministically after the first (cost-
+  seeding) batch: fallbacks and overruns are *counted* in the endpoint
+  snapshot's per-stage fields, requests never error.  Generous budgets
+  never trip.  candgen/fusion overruns are counted but never change the
+  answer (those stages must run).
+* **Sharded** — a funnel over a ``ShardedPipeline`` reranks exactly once
+  per batch, after the global merge, bit-identical to the unsharded
+  funnel.
+* **Live** — a funnel over a ``LiveGenerator`` pins exactly one snapshot
+  per batch; fusion and rerank score candidate ids from the snapshot
+  that produced them.
+* **EndpointSpec** — the consolidated registration value: kwargs-shim
+  equivalence, construction-time validation, tuned-profile expansion
+  (``TunedProfile.to_spec``) carrying funnel genes, spec-vs-kwargs
+  ambiguity rejection.
+* **Descriptors** — the legacy ``backend``/``backendParams`` descriptor
+  keys canonicalize to ``execBackend``/``execBackendParams`` and
+  round-trip through ``RetrievalPipeline.descriptor``.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.brute_force import TopK
+from repro.core.pipeline import (BruteForceGenerator, RetrievalPipeline,
+                                 _reorder, apply_rerankers, pin_snapshot)
+from repro.core.spaces import DenseSpace
+from repro.distributed.sharding import ParallelCtx
+from repro.configs.base import TransformerConfig
+from repro.serving import (EndpointSpec, FunnelPipeline, RetrievalService,
+                           ServingConfig, StageBudget, TunedProfile)
+from repro.serving.live import LiveCorpus, LiveGenerator
+from repro.serving.sharded import ShardedPipeline
+
+pytestmark = pytest.mark.funnel
+
+N, D, K_CAND, K_FUSE, K_SERVE = 64, 8, 32, 16, 8
+N_QUERIES = 12
+
+
+def _space():
+    return DenseSpace("ip")
+
+
+def _data(seed=0, n=N):
+    rng = np.random.default_rng(seed)
+    corpus = jnp.asarray(rng.standard_normal((n, D)).astype(np.float32))
+    queries = jnp.asarray(
+        rng.standard_normal((N_QUERIES, D)).astype(np.float32))
+    return corpus, queries
+
+
+class IdBias:
+    """Deterministic Reranker: re-scores candidates from their scores,
+    ids, and (when given) the query tokens — exercises the full
+    ``rerank(q_tokens, cands, keep)`` protocol without model weights."""
+
+    def __init__(self, scale: float):
+        self.scale = scale
+
+    def rerank(self, q_tokens, cands, keep):
+        bias = (cands.indices % 7).astype(jnp.float32) * self.scale
+        if q_tokens is not None:
+            bias = bias + 1e-3 * jnp.sum(
+                q_tokens.astype(jnp.float32), axis=-1, keepdims=True)
+        mask = jnp.isfinite(cands.scores)
+        return _reorder(cands, jnp.where(mask, cands.scores + bias,
+                                         -jnp.inf), keep)
+
+
+class Slow:
+    """Reranker wrapper with an injected host-side delay."""
+
+    def __init__(self, inner, delay_s: float):
+        self.inner = inner
+        self.delay_s = delay_s
+        self.calls = 0
+
+    def rerank(self, q_tokens, cands, keep):
+        self.calls += 1
+        time.sleep(self.delay_s)
+        return self.inner.rerank(q_tokens, cands, keep)
+
+
+def _funnel(gen, **kw):
+    kw.setdefault("fusion", IdBias(0.5))
+    kw.setdefault("rerank", IdBias(2.0))
+    kw.setdefault("cand_qty", K_CAND)
+    kw.setdefault("fusion_qty", K_FUSE)
+    kw.setdefault("rerank_keep", K_SERVE)
+    return FunnelPipeline(gen, **kw)
+
+
+def _offline(gen, queries, *, fusion=None, rerank=None, q_tokens=None,
+             cand_qty=K_CAND, fusion_qty=K_FUSE, keep=K_SERVE):
+    """The reference composition the funnel must be bit-identical to."""
+    cands = pin_snapshot(gen).generate(queries, cand_qty)
+    return apply_rerankers(cands, q_tokens, intermediate=fusion,
+                           final=rerank, interm_qty=fusion_qty,
+                           final_qty=keep)
+
+
+def _assert_topk_equal(a: TopK, b: TopK):
+    assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
+# ---------------------------------------------------------------------------
+# Offline funnel identity.
+# ---------------------------------------------------------------------------
+
+class TestFunnelIdentity:
+    def test_run_matches_apply_rerankers(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        fusion, rerank = IdBias(0.5), IdBias(2.0)
+        funnel = _funnel(gen, fusion=IdBias(0.5), rerank=IdBias(2.0))
+        _assert_topk_equal(
+            funnel.run(queries),
+            _offline(gen, queries, fusion=fusion, rerank=rerank))
+
+    def test_fusion_only_funnel_truncates_like_apply_rerankers(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen, rerank=None)
+        _assert_topk_equal(funnel.run(queries),
+                           _offline(gen, queries, fusion=IdBias(0.5)))
+
+    def test_q_tokens_reach_both_rerank_stages(self):
+        corpus, queries = _data()
+        toks = jnp.arange(N_QUERIES * 4, dtype=jnp.int32).reshape(
+            N_QUERIES, 4)
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen)
+        _assert_topk_equal(
+            funnel.run(queries, toks),
+            _offline(gen, queries, fusion=IdBias(0.5), rerank=IdBias(2.0),
+                     q_tokens=toks))
+
+    def test_widths_must_narrow(self):
+        corpus, _ = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        with pytest.raises(ValueError, match="narrow"):
+            FunnelPipeline(gen, cand_qty=10, fusion_qty=20, rerank_keep=5)
+        with pytest.raises(ValueError, match="narrow"):
+            FunnelPipeline(gen, cand_qty=30, fusion_qty=20, rerank_keep=25)
+
+    def test_trace_times_every_stage(self):
+        corpus, queries = _data()
+        funnel = _funnel(BruteForceGenerator(_space(), corpus))
+        _, trace = funnel.run_timed(queries)
+        assert trace.candgen_s >= 0
+        assert trace.fusion_s is not None and trace.rerank_s is not None
+        assert not trace.fallback and trace.overruns == ()
+        assert funnel.rerank_cost_estimate_s is not None
+
+    def test_cross_encoder_reranker_is_a_funnel_stage(self):
+        """The real neural final stage: CrossEncoderReranker over a tiny
+        transformer serves as the funnel's rerank, identical to the
+        offline composition with the same reranker."""
+        from repro.models import transformer as T
+        from repro.models.encoder import CrossEncoderReranker
+
+        cfg = TransformerConfig(name="tiny", n_layers=1, d_model=16,
+                                n_heads=2, n_kv_heads=2, d_ff=32,
+                                vocab_size=31, dtype="float32",
+                                remat=False)
+        params, _ = T.init_transformer(jax.random.PRNGKey(0), cfg)
+        ctx = ParallelCtx(None, {})
+        corpus, queries = _data()
+        rng = np.random.default_rng(3)
+        doc_tok = jnp.asarray(rng.integers(0, 31, size=(N, 6)), jnp.int32)
+        q_tok = jnp.asarray(
+            rng.integers(0, 31, size=(N_QUERIES, 6)), jnp.int32)
+        ce = CrossEncoderReranker(params, cfg, ctx, doc_tok)
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen, rerank=ce)
+        out = funnel.run(queries, q_tok)
+        _assert_topk_equal(out, _offline(gen, queries, fusion=IdBias(0.5),
+                                         rerank=ce, q_tokens=q_tok))
+        assert out.indices.shape == (N_QUERIES, K_SERVE)
+
+
+# ---------------------------------------------------------------------------
+# Served funnel == offline funnel; per-stage snapshot fields.
+# ---------------------------------------------------------------------------
+
+class TestServedFunnel:
+    def test_served_matches_offline_with_stage_stats(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen)
+        want = _offline(gen, queries, fusion=IdBias(0.5), rerank=IdBias(2.0))
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("funnel", funnel, queries[0],
+                                  batch_size=4, max_wait_s=0.005)
+            got = svc.retrieve(list(queries), endpoint="funnel")
+            ep = svc.snapshot().endpoints["funnel"]
+        for i, row in enumerate(got):
+            assert np.array_equal(row.indices, np.asarray(want.indices)[i])
+            assert np.array_equal(row.scores, np.asarray(want.scores)[i])
+        assert set(ep.stages) == {"candgen", "fusion", "rerank"}
+        for s in ("candgen", "fusion", "rerank"):
+            assert ep.stages[s].count == ep.n_batches
+            assert ep.stages[s].p99_ms >= ep.stages[s].p50_ms >= 0
+            assert ep.stage_fallbacks[s] == 0
+            assert ep.stage_overruns[s] == 0
+            assert ep.stage_occupancy[s] == 1.0
+
+    def test_plain_endpoint_snapshot_has_no_stage_fields(self):
+        corpus, queries = _data()
+        pipe = RetrievalPipeline(BruteForceGenerator(_space(), corpus),
+                                 cand_qty=K_CAND, final_qty=K_SERVE)
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("plain", pipe, queries[0], batch_size=4)
+            svc.retrieve(list(queries), endpoint="plain")
+            ep = svc.snapshot().endpoints["plain"]
+        assert ep.stages is None and ep.stage_fallbacks is None
+        assert ep.stage_overruns is None and ep.stage_occupancy is None
+
+    def test_funnel_endpoint_rejects_jit(self):
+        corpus, queries = _data()
+        funnel = _funnel(BruteForceGenerator(_space(), corpus))
+        with RetrievalService(cache_size=0) as svc:
+            with pytest.raises(ValueError, match="jitted"):
+                svc.register_pipeline("f", funnel, queries[0], jit=True)
+
+    def test_funnel_knobs_rejected_on_plain_pipeline(self):
+        corpus, queries = _data()
+        pipe = RetrievalPipeline(BruteForceGenerator(_space(), corpus))
+        with RetrievalService(cache_size=0) as svc:
+            with pytest.raises(ValueError, match="funnel knobs"):
+                svc.register_pipeline("p", pipe, queries[0],
+                                      budget=StageBudget(rerank_s=0.1))
+            with pytest.raises(ValueError, match="funnel knobs"):
+                svc.register_pipeline("p2", pipe, queries[0],
+                                      rerank_keep=4)
+
+
+# ---------------------------------------------------------------------------
+# Budget-driven degradation: counted, deterministic, never an error.
+# ---------------------------------------------------------------------------
+
+class TestStageBudgets:
+    def test_slow_rerank_under_tight_budget_degrades_after_seeding(self):
+        """Batch 1 pays the slow rerank once (seeding the cost estimate,
+        counted as an overrun); every later batch skips it (counted as a
+        fallback) and serves exactly the fused ranking truncated to the
+        serve width.  Zero request errors throughout."""
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        slow = Slow(IdBias(2.0), delay_s=0.05)
+        funnel = _funnel(gen, rerank=slow,
+                         budget=StageBudget(rerank_s=0.005))
+        full = _offline(gen, queries, fusion=IdBias(0.5), rerank=IdBias(2.0))
+        fused = _offline(gen, queries, fusion=IdBias(0.5))
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("f", funnel, queries[0], batch_size=1,
+                                  max_wait_s=0.001)
+            rows = [svc.retrieve([queries[i]], endpoint="f")[0]
+                    for i in range(N_QUERIES)]
+            ep = svc.snapshot().endpoints["f"]
+        # batch 1: full funnel (rerank ran, blew its 5ms deadline)
+        assert np.array_equal(rows[0].indices, np.asarray(full.indices)[0])
+        assert np.array_equal(rows[0].scores, np.asarray(full.scores)[0])
+        # batches 2..N: degraded == fused-truncated, bit for bit
+        for i in range(1, N_QUERIES):
+            assert np.array_equal(rows[i].indices,
+                                  np.asarray(fused.indices)[i])
+            assert np.array_equal(rows[i].scores,
+                                  np.asarray(fused.scores)[i])
+        assert slow.calls == 1
+        assert ep.stage_overruns["rerank"] == 1
+        assert ep.stage_fallbacks["rerank"] == N_QUERIES - 1
+        assert ep.stages["rerank"].count == 1
+        assert ep.stage_occupancy["rerank"] == 1 / N_QUERIES
+        assert ep.stage_occupancy["candgen"] == 1.0
+        assert ep.e2e.count == N_QUERIES          # everyone got an answer
+
+    def test_generous_budget_never_trips(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        slow = Slow(IdBias(2.0), delay_s=0.001)
+        funnel = _funnel(gen, rerank=slow,
+                         budget=StageBudget(rerank_s=30.0, total_s=60.0))
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("f", funnel, queries[0], batch_size=4,
+                                  max_wait_s=0.005)
+            svc.retrieve(list(queries), endpoint="f")
+            ep = svc.snapshot().endpoints["f"]
+        assert ep.stage_fallbacks["rerank"] == 0
+        assert ep.stage_overruns["rerank"] == 0
+        assert ep.stages["rerank"].count == ep.n_batches
+        assert slow.calls == ep.n_batches
+
+    def test_exhausted_total_budget_skips_rerank_before_estimate(self):
+        """elapsed_s already past total_s: the rerank stage is skipped
+        even with no cost estimate yet — the e2e budget covers queue
+        wait, and a batch that arrives late degrades immediately."""
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen, budget=StageBudget(total_s=1.0))
+        out, trace = funnel.run_timed(queries, elapsed_s=10.0)
+        assert trace.fallback and trace.rerank_s is None
+        assert "spent" in trace.fallback_reason
+        _assert_topk_equal(out, _offline(gen, queries, fusion=IdBias(0.5)))
+
+    def test_candgen_fusion_overruns_counted_never_degraded(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        funnel = _funnel(gen, budget=StageBudget(candgen_s=1e-9,
+                                                 fusion_s=1e-9))
+        out, trace = funnel.run_timed(queries)
+        assert set(trace.overruns) == {"candgen", "fusion"}
+        assert not trace.fallback
+        _assert_topk_equal(out, _offline(gen, queries, fusion=IdBias(0.5),
+                                         rerank=IdBias(2.0)))
+
+    def test_budget_fields_must_be_positive(self):
+        with pytest.raises(ValueError, match="positive"):
+            StageBudget(rerank_s=0.0)
+        with pytest.raises(ValueError, match="positive"):
+            StageBudget(total_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded funnel: rerank once, after the global merge.
+# ---------------------------------------------------------------------------
+
+class TestShardedFunnel:
+    def test_sharded_funnel_reranks_once_after_merge(self):
+        corpus, queries = _data()
+        sharded = ShardedPipeline.from_corpus(_space(), corpus, 2)
+        slow_fuse = Slow(IdBias(0.5), delay_s=0.0)
+        slow_rr = Slow(IdBias(2.0), delay_s=0.0)
+        funnel = _funnel(sharded, fusion=slow_fuse, rerank=slow_rr)
+        unsharded = _funnel(BruteForceGenerator(_space(), corpus))
+        want = unsharded.run(queries)
+        try:
+            with RetrievalService(cache_size=0) as svc:
+                svc.register_pipeline("sharded", funnel, queries[0],
+                                      batch_size=4, max_wait_s=0.005)
+                got = svc.retrieve(list(queries), endpoint="sharded")
+                ep = svc.snapshot().endpoints["sharded"]
+            # fusion and rerank each ran exactly once per batch — over the
+            # globally-merged candidates, not once per shard
+            assert slow_fuse.calls == ep.n_batches
+            assert slow_rr.calls == ep.n_batches
+            for i, row in enumerate(got):
+                assert np.array_equal(row.indices,
+                                      np.asarray(want.indices)[i])
+                assert np.array_equal(row.scores,
+                                      np.asarray(want.scores)[i])
+        finally:
+            sharded.close()
+
+    def test_funnel_reports_shard_count(self):
+        corpus, _ = _data()
+        sharded = ShardedPipeline.from_corpus(_space(), corpus, 2)
+        try:
+            assert _funnel(sharded).n_shards == 2
+            assert _funnel(
+                BruteForceGenerator(_space(), corpus)).n_shards == 1
+        finally:
+            sharded.close()
+
+
+# ---------------------------------------------------------------------------
+# Live funnel: one pinned snapshot per batch, both stages included.
+# ---------------------------------------------------------------------------
+
+class TestLiveFunnel:
+    def test_live_funnel_pins_one_snapshot_per_batch(self):
+        corpus, queries = _data()
+        live = LiveCorpus(_space(), corpus, max_append=10**9)
+        gen = LiveGenerator(live)
+        binds = []
+        orig_bind = gen.bind_snapshot
+        gen.bind_snapshot = lambda: (binds.append(1), orig_bind())[1]
+        funnel = _funnel(gen)
+        # reference: a second live corpus with the identical segment
+        # layout (per-segment scoring is not bitwise == one big matmul)
+        ref = _funnel(LiveGenerator(
+            LiveCorpus(_space(), corpus, max_append=10**9)))
+        want = ref.run(queries)
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("lf", funnel, queries[0], live=live,
+                                  batch_size=4, max_wait_s=0.005)
+            got = svc.retrieve(list(queries), endpoint="lf")
+            ep = svc.snapshot().endpoints["lf"]
+        assert len(binds) == ep.n_batches       # exactly one pin per batch
+        assert set(ep.stages) == {"candgen", "fusion", "rerank"}
+        for i, row in enumerate(got):
+            assert np.array_equal(row.indices, np.asarray(want.indices)[i])
+            assert np.array_equal(row.scores, np.asarray(want.scores)[i])
+
+    def test_live_funnel_survives_mutation_between_batches(self):
+        """A funnel batch served after an insert answers from the NEW
+        state (fusion/rerank included); the pinned-generation seam keeps
+        each batch internally consistent."""
+        corpus, queries = _data()
+        rng = np.random.default_rng(7)
+        extra = jnp.asarray(rng.standard_normal((4, D)).astype(np.float32))
+        live = LiveCorpus(_space(), corpus, max_append=10**9)
+        funnel = _funnel(LiveGenerator(live))
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("lf", funnel, queries[0], live=live,
+                                  batch_size=4, max_wait_s=0.005)
+            before = svc.retrieve(list(queries), endpoint="lf")
+            live.insert(extra)
+            after = svc.retrieve(list(queries), endpoint="lf")
+        ref_live = LiveCorpus(_space(), corpus, max_append=10**9)
+        ref_live.insert(extra)
+        want = _funnel(LiveGenerator(ref_live)).run(queries)
+        for i, row in enumerate(after):
+            assert np.array_equal(row.indices, np.asarray(want.indices)[i])
+        assert len(before) == len(after) == N_QUERIES
+
+
+# ---------------------------------------------------------------------------
+# EndpointSpec: the consolidated registration surface.
+# ---------------------------------------------------------------------------
+
+class TestEndpointSpec:
+    def test_spec_and_kwargs_registrations_serve_identically(self):
+        corpus, queries = _data()
+        gen = BruteForceGenerator(_space(), corpus)
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("kw", _funnel(gen), queries[0],
+                                  batch_size=4, max_wait_s=0.005,
+                                  rerank_keep=K_SERVE)
+            svc.register_pipeline(
+                "spec", _funnel(gen), queries[0],
+                spec=EndpointSpec(batch_size=4, max_wait_s=0.005,
+                                  rerank_keep=K_SERVE))
+            a = svc.retrieve(list(queries), endpoint="kw")
+            b = svc.retrieve(list(queries), endpoint="spec")
+        for ra, rb in zip(a, b):
+            assert np.array_equal(ra.indices, rb.indices)
+            assert np.array_equal(ra.scores, rb.scores)
+
+    def test_illegal_specs_rejected_at_construction(self):
+        for bad in (dict(batch_size=0), dict(max_wait_s=0.0),
+                    dict(overload="drop_newest"), dict(max_queue=0),
+                    dict(max_queue=2, batch_size=8), dict(rerank_keep=0),
+                    dict(corpus_dtype="float64")):
+            with pytest.raises(ValueError):
+                EndpointSpec(**bad)
+        with pytest.raises(TypeError, match="StageBudget"):
+            EndpointSpec(budget=0.5)            # raw float is ambiguous
+
+    def test_live_exclusivity_enforced_in_spec(self):
+        sentinel = object()
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            EndpointSpec(live=sentinel, backend="streaming")
+        with pytest.raises(ValueError, match="jitted"):
+            EndpointSpec(live=sentinel, jit=True)
+
+    def test_spec_alongside_kwargs_is_ambiguous(self):
+        corpus, queries = _data()
+        funnel = _funnel(BruteForceGenerator(_space(), corpus))
+        with RetrievalService(cache_size=0) as svc:
+            with pytest.raises(ValueError, match="ambiguous"):
+                svc.register_pipeline("f", funnel, queries[0],
+                                      spec=EndpointSpec(), batch_size=8)
+            with pytest.raises(ValueError, match="ambiguous"):
+                svc.register_runner("r", lambda b, _t: b, queries[0],
+                                    spec=EndpointSpec(), jit=True)
+
+    def test_tuned_profile_expands_to_spec_with_funnel_genes(self):
+        cfg = ServingConfig(backend="reference", batch_size=4,
+                            max_wait_s=0.005, rerank_keep=4,
+                            rerank_budget_ms=60000.0)
+        prof = TunedProfile(config=cfg)
+        spec = prof.to_spec()
+        assert spec.batch_size == 4 and spec.rerank_keep == 4
+        assert spec.budget == StageBudget(rerank_s=60.0)
+        assert spec.profile is prof
+        corpus, queries = _data()
+        funnel = _funnel(BruteForceGenerator(_space(), corpus))
+        with RetrievalService(cache_size=0) as svc:
+            svc.register_pipeline("tuned", funnel, queries[0], profile=prof)
+            rows = svc.retrieve(list(queries), endpoint="tuned")
+            ep = svc.snapshot().endpoints["tuned"]
+        assert ep.profile == prof.tag
+        assert ep.backend.startswith("reference")
+        for row in rows:
+            assert row.indices.shape == (4,)     # profile's rerank_keep
+
+    def test_funnel_genome_knobs_are_legal_and_checked(self):
+        from repro.serving.autotune import check_config
+
+        ok = ServingConfig(rerank_keep=10, rerank_budget_ms=5.0)
+        assert check_config(ok, k=10) is None
+        assert check_config(ServingConfig(rerank_keep=5), k=10) is not None
+        assert check_config(ServingConfig(rerank_keep=10,
+                                          rerank_budget_ms=0.0),
+                            k=10) is not None
+
+
+# ---------------------------------------------------------------------------
+# Descriptor key canonicalization (legacy backend/backendParams).
+# ---------------------------------------------------------------------------
+
+class TestDescriptorCanonicalization:
+    def _ctx(self):
+        corpus, queries = _data()
+        return ({"candidate_provider": BruteForceGenerator(_space(),
+                                                           corpus)},
+                queries)
+
+    def test_legacy_keys_canonicalize_and_round_trip(self):
+        ctx, queries = self._ctx()
+        legacy = {"backend": "streaming", "backendParams": {"tile_n": 16},
+                  "candQty": 16, "finalQty": 4}
+        pipe = RetrievalPipeline.from_descriptor(legacy, ctx)
+        desc = pipe.descriptor
+        assert "backend" not in desc and "backendParams" not in desc
+        assert desc["execBackend"] == "streaming"
+        assert desc["execBackendParams"] == {"tile_n": 16}
+        again = RetrievalPipeline.from_descriptor(desc, ctx)
+        assert again.descriptor == desc          # fixed point
+        a, b = pipe.run(queries), again.run(queries)
+        _assert_topk_equal(a, b)
+
+    def test_conflicting_spellings_rejected(self):
+        ctx, _ = self._ctx()
+        with pytest.raises(ValueError, match="both"):
+            RetrievalPipeline.from_descriptor(
+                {"backend": "streaming", "execBackend": "reference"}, ctx)
+        # agreeing duplicates are fine (idempotent canonicalization)
+        pipe = RetrievalPipeline.from_descriptor(
+            {"backend": "reference", "execBackend": "reference"}, ctx)
+        assert pipe.descriptor["execBackend"] == "reference"
+
+    def test_hand_built_pipeline_reports_canonical_keys(self):
+        ctx, _ = self._ctx()
+        pipe = RetrievalPipeline(
+            ctx["candidate_provider"], cand_qty=16,
+            final_qty=4).with_backend("streaming")
+        desc = pipe.descriptor
+        assert desc["execBackend"].startswith("streaming")
+        assert desc["candQty"] == 16 and desc["finalQty"] == 4
+        assert "backend" not in desc

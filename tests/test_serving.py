@@ -439,8 +439,10 @@ class TestAdmissionControl:
         assert snap_mid.endpoints["gated"].rejected == 1
 
     def test_invalid_policy_and_depth_rejected(self):
+        # both now rejected by EndpointSpec validation (check_config),
+        # before any endpoint state exists
         svc = RetrievalService(cache_size=0)
-        with pytest.raises(ValueError, match="overload policy"):
+        with pytest.raises(ValueError, match="overload"):
             svc.register_runner("bad", lambda b, _t: b, jnp.zeros((2,)),
                                 overload="drop_newest")
         with pytest.raises(ValueError, match="max_queue"):
@@ -451,12 +453,16 @@ class TestAdmissionControl:
 
 class TestCompatShim:
     def test_batching_server_matches_batched_fn(self):
-        """The legacy BatchingServer surface: full + partial batches served
-        bitwise-equal to the wrapped fn, stats populated, GC-safe close."""
+        """The legacy BatchingServer surface: deprecated (it now routes
+        through EndpointSpec registration) but still serving full +
+        partial batches bitwise-equal to the wrapped fn, stats populated,
+        GC-safe close."""
         c = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
         fn = jax.jit(lambda q: jax.lax.top_k(q @ c.T, 5))
-        srv = BatchingServer(fn, batch_size=8, pad_query=jnp.zeros((16,)),
-                             window_s=0.005)
+        with pytest.warns(DeprecationWarning, match="EndpointSpec"):
+            srv = BatchingServer(fn, batch_size=8,
+                                 pad_query=jnp.zeros((16,)),
+                                 window_s=0.005)
         qs = [jax.random.normal(jax.random.PRNGKey(i), (16,))
               for i in range(13)]            # one full + one partial batch
         out = srv.serve(qs)
